@@ -1,0 +1,2 @@
+"""Benchmark harness: one module per paper table (tables.py), the roofline
+analysis (roofline.py), and the CSV runner (run.py)."""

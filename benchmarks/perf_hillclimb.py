@@ -1,0 +1,106 @@
+"""§Perf hillclimbing harness: lower+compile named variants of a target
+(arch x shape) pair and report the roofline-relevant deltas — the
+hypothesis -> change -> measure loop runs through this.
+
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb \
+      --arch llama4-scout-17b-a16e --shape train_4k --variant baseline
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb --arch ... --hlo-dtypes
+
+Variants are named code-level switches (see VARIANTS); each prints
+per-device FLOPs, bytes, collective breakdown by kind AND dtype, and temp
+memory, so before/after rows in EXPERIMENTS.md §Perf come straight from
+this tool.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import lower_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+
+
+def collective_dtype_breakdown(hlo_text: str, loop_scale: int) -> dict:
+    """collective kind -> dtype -> exec-weighted bytes."""
+    comps = hlo_analysis.split_computations(hlo_text)
+    bodies = hlo_analysis.while_bodies(hlo_text)
+    out = defaultdict(lambda: defaultdict(int))
+    op_re = hlo_analysis._OP_RE
+    for name, lines in comps.items():
+        scale = loop_scale if name in bodies else 1
+        for line in lines:
+            m = op_re.search(line)
+            if not m:
+                continue
+            dtype, dims, opname = m.groups()
+            base = opname.replace("-start", "")
+            if opname.endswith("-done") or base not in hlo_analysis.COLLECTIVES:
+                continue
+            out[base][dtype] += scale * hlo_analysis._nbytes(dtype, dims)
+    return {k: dict(v) for k, v in out.items()}
+
+
+def measure(arch: str, shape: str, label: str = "baseline", cfg=None):
+    cfg = cfg or get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    lowered = lower_for(cfg, shape, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_dtype_breakdown(hlo, cfg.n_repeats)
+    total_coll = sum(b for kinds in coll.values() for b in kinds.values())
+    rec = {
+        "label": label,
+        "arch": arch,
+        "shape": shape,
+        "flops_dev": float(cost.get("flops", 0.0)),
+        "bytes_dev": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_dev": total_coll,
+        "collectives": coll,
+        "temp_dev": int(mem.temp_size_in_bytes),
+        "collective_s": total_coll / 50e9,
+    }
+    print(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--label", default="baseline")
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="pad attention heads to this multiple (semantics-"
+                         "exact; §Perf optimization)")
+    ap.add_argument("--remat-policy", default=None, choices=("full", "dots"))
+    ap.add_argument("--bf16-logits", action="store_true")
+    ap.add_argument("--wkv-backend", default=None, choices=("scan", "chunked"))
+    args = ap.parse_args()
+    import dataclasses
+    cfg = get_config(args.arch)
+    if args.pad_heads:
+        cfg = dataclasses.replace(cfg, pad_attn_heads=args.pad_heads)
+    if args.remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=args.remat_policy)
+    if args.bf16_logits:
+        cfg = dataclasses.replace(cfg, logits_dtype="bfloat16")
+    if args.wkv_backend:
+        cfg = dataclasses.replace(cfg, wkv_backend=args.wkv_backend)
+    measure(args.arch, args.shape, args.label, cfg=cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Roofline analysis from the compiled dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+Terms per (arch x shape), single-pod 16x16 mesh, TPU v5e constants:
+
+    compute   = HLO_FLOPs_global    / (chips * 197e12)
+    memory    = HLO_bytes_global    / (chips * 819e9)
+    collective= collective_bytes    / (chips * 50e9)
+
+Methodology notes (validated empirically in this repo):
+
+* ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of
+  trip count (measured: scan(10) == scan(20) == 1 matmul of FLOPs). Since the
+  layer stack is a scan, we recover true totals by **depth differencing**:
+  compile depth-1 and depth-2 variants of the same config/shape, then
+  ``total = f(1) + (R-1) * (f(2) - f(1))``.
+* rwkv6/mamba2 *training/prefill* additionally run a time scan inside each
+  layer (decode does not); its body is also counted once. We add the
+  analytic per-token recurrence cost (flagged ``analytic_scan_add`` in the
+  output) — ~5*H*N^2 flops/token for WKV6, ~5*d_inner*N for SSD, x3 for
+  backward.
+* cost_analysis numbers are per-device (the partitioned module);
+  global = x chips. Collective bytes come from the HLO parse
+  (repro.launch.hlo_analysis), exec-weighted by the layer-scan trip count.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline \
+      --dryrun results/dryrun_single.jsonl --out results/roofline.json
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.dryrun import lower_for
+from repro.launch.mesh import (
+    CHIPS_PER_POD,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+from repro.models import lm
+
+CHIPS = CHIPS_PER_POD  # single-pod roofline
+
+
+def _cost(cfg, shape_name, mesh):
+    lowered = lower_for(cfg, shape_name, mesh)
+    c = lowered.compile().cost_analysis()
+    return float(c.get("flops", 0.0)), float(c.get("bytes accessed", 0.0))
+
+
+def _depth_variant(cfg, mult):
+    # scan_unroll=True inlines the layer loop so cost_analysis actually sees
+    # `mult` bodies (a rolled while body is counted once regardless of trips
+    # — measured; differencing two rolled variants would give ~0).
+    return dataclasses.replace(
+        cfg, n_layers=mult * len(cfg.block_pattern), scan_unroll=True)
+
+
+def analytic_scan_addback(cfg, shape_name) -> float:
+    """Per-DEVICE flops of inner time-scan bodies missed by cost_analysis."""
+    spec = INPUT_SHAPES[shape_name]
+    if spec["step"] == "decode":
+        return 0.0                     # decode has no inner time scan
+    tokens_global = spec["global_batch"] * spec["seq_len"]
+    # tokens are data-parallel over 16 of the 256 chips
+    tokens_dev = tokens_global / 16
+    mult = 3.0 if spec["step"] == "train" else 1.0
+    per_token = 0.0
+    n_rwkv = sum(k == "rwkv6" for k in cfg.block_pattern) * cfg.n_repeats
+    n_mamba = sum(k == "mamba2" for k in cfg.block_pattern) * cfg.n_repeats
+    if n_rwkv:
+        n = cfg.d_model // cfg.n_heads
+        per_token += n_rwkv * 5.0 * cfg.n_heads * n * n
+    if n_mamba:
+        d_inner = 2 * cfg.d_model
+        per_token += n_mamba * 5.0 * d_inner * cfg.ssm_state
+    return mult * per_token * tokens_dev / 16  # heads sharded over model=16
+
+
+def roofline_for(arch: str, shape_name: str, mesh, dry_rec: dict) -> dict:
+    cfg = get_config(arch)
+    r = cfg.n_repeats
+
+    f1, b1 = _cost(_depth_variant(cfg, 1), shape_name, mesh)
+    f2, b2 = _cost(_depth_variant(cfg, 2), shape_name, mesh)
+    flops_dev = f1 + (r - 1) * (f2 - f1)
+    bytes_dev = b1 + (r - 1) * (b2 - b1)
+    addback = analytic_scan_addback(cfg, shape_name)
+    flops_dev += addback
+
+    flops_global = flops_dev * CHIPS
+    bytes_global = bytes_dev * CHIPS
+    coll_dev = dry_rec["collective_bytes"]          # per-device, exec-weighted
+    coll_global = coll_dev * CHIPS
+
+    compute_s = flops_global / (CHIPS * PEAK_FLOPS_BF16)
+    memory_s = bytes_global / (CHIPS * HBM_BW)
+    collective_s = coll_global / (CHIPS * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6*N_active*tokens (train) / 2*N_active*tokens (inference),
+    # + decode attention cache reads where applicable
+    counts = lm.param_counts(cfg)
+    n_active = counts["active"]
+    spec = INPUT_SHAPES[shape_name]
+    tokens = spec["global_batch"] * (
+        1 if spec["step"] == "decode" else spec["seq_len"]
+    )
+    mult = 6 if spec["step"] == "train" else 2
+    model_flops = mult * n_active * tokens
+    if spec["step"] == "decode":
+        # attention over the cache dominates decode model-flops
+        s_kv = spec["seq_len"]
+        for kind in cfg.block_pattern:
+            if kind == "attn":
+                model_flops += (4 * spec["global_batch"] * s_kv
+                                * cfg.n_heads * cfg.hd) * cfg.n_repeats
+            elif kind == "local":
+                model_flops += (4 * spec["global_batch"]
+                                * min(cfg.window, s_kv)
+                                * cfg.n_heads * cfg.hd) * cfg.n_repeats
+        if cfg.shared_attn:
+            model_flops += (4 * spec["global_batch"]
+                            * min(cfg.window or s_kv, s_kv)
+                            * cfg.n_heads * cfg.hd) * cfg.n_repeats
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "chips": CHIPS,
+        "flops_global": flops_global,
+        "bytes_global": bytes_global,
+        "collective_bytes_global": coll_global,
+        "analytic_scan_add_dev": addback,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(flops_global, 1.0),
+        "collectives_by_kind": dry_rec.get("collectives", {}),
+        "temp_bytes_dev": dry_rec.get("temp_size_in_bytes"),
+        "arg_bytes_dev": dry_rec.get("argument_size_in_bytes"),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun_single.jsonl")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--arch", default=None, help="limit to one arch")
+    args = ap.parse_args()
+
+    dry = {}
+    with open(args.dryrun) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("status") == "ok" and not rec.get("multi_pod"):
+                dry[(rec["arch"], rec["shape"])] = rec
+
+    mesh = make_production_mesh(multi_pod=False)
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        if args.arch and arch != args.arch:
+            continue
+        for shape_name in INPUT_SHAPES:
+            if (arch, shape_name) not in dry:
+                continue
+            rec = roofline_for(arch, shape_name, mesh, dry[(arch, shape_name)])
+            out.append(rec)
+            print(f"{arch:24s} {shape_name:12s} "
+                  f"C={rec['compute_s']*1e3:9.3f}ms "
+                  f"M={rec['memory_s']*1e3:9.3f}ms "
+                  f"X={rec['collective_s']*1e3:9.3f}ms "
+                  f"dom={rec['dominant']:10s} "
+                  f"useful={rec['useful_ratio']:.2f}")
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out} ({len(out)} rows)")
+
+
+if __name__ == "__main__":
+    main()

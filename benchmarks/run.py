@@ -1,0 +1,137 @@
+"""Benchmark runner: one function per paper table + kernel micro-benches.
+
+Prints ``name,us_per_call,derived`` CSV (derived = AUC for training tables,
+checksum/throughput for kernels). Full tables go to stdout above the CSV;
+all training results cache in results/bench_cache.json.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # full grid
+  PYTHONPATH=src python -m benchmarks.run --fast     # 1x/16x columns only
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import tables
+from .common import BASE_BATCH, fmt_auc, run_ctr
+
+
+def _csv(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def kernel_microbench() -> list:
+    """Micro-benchmarks of the kernel code paths runnable on CPU.
+
+    The Pallas kernels themselves are TPU-targeted (interpret mode on CPU is
+    a correctness harness, not a performance path), so the timed numbers here
+    are the jnp reference implementations; the derived column carries a
+    checksum proving kernel/reference agreement.
+    """
+    from repro.kernels.cowclip import fused_cowclip_adam
+    from repro.kernels.cowclip import reference as cc_ref
+    from repro.kernels.wkv6 import reference as wkv_ref
+
+    rows = []
+    # cowclip update chain on a 100K x 16 table
+    key = jax.random.key(0)
+    vocab, dim = 100_000, 16
+    ks = jax.random.split(key, 5)
+    w = 0.01 * jax.random.normal(ks[0], (vocab, dim))
+    g = 0.1 * jax.random.normal(ks[1], (vocab, dim))
+    cnt = jax.random.randint(ks[2], (vocab,), 0, 3).astype(jnp.float32)
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    step = jnp.asarray(1, jnp.int32)
+
+    ref_jit = jax.jit(lambda *a: cc_ref(*a))
+    out = ref_jit(w, g, cnt, m, v, step)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    n = 10
+    for _ in range(n):
+        out = ref_jit(w, g, cnt, m, v, step)
+    jax.block_until_ready(out)
+    us = 1e6 * (time.perf_counter() - t0) / n
+    kern = fused_cowclip_adam(w, g, cnt, m, v, step)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(kern, out))
+    rows.append(_csv("kernel/cowclip_update_100kx16", us,
+                     f"kernel_vs_ref_maxerr={err:.2e}"))
+
+    # wkv6 scan, 8 heads x 256 tokens x 64
+    inp = [jax.random.normal(jax.random.fold_in(key, i), (8, 256, 64))
+           for i in range(3)]
+    wdec = jnp.exp(-jnp.exp(-0.6 + jax.random.normal(ks[3], (8, 256, 64))))
+    u = 0.1 * jax.random.normal(ks[4], (8, 64))
+    ref_jit = jax.jit(lambda *a: wkv_ref(*a))
+    y, s = ref_jit(*inp, wdec, u)
+    jax.block_until_ready(y)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        y, s = ref_jit(*inp, wdec, u)
+    jax.block_until_ready(y)
+    us = 1e6 * (time.perf_counter() - t0) / 5
+    toks_per_s = 8 * 256 / (us / 1e6)
+    rows.append(_csv("kernel/wkv6_scan_8x256x64", us,
+                     f"tokens_per_s={toks_per_s:.0f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced batch grid (uses/builds the same cache)")
+    args = ap.parse_args()
+
+    if args.fast:
+        tables.SCALES = (1, 16)
+        tables.BATCHES = tuple(BASE_BATCH * s for s in tables.SCALES)
+
+    csv_rows = []
+
+    t2 = tables.table2_scaling_failure()
+    for (rule, b), rec in t2.items():
+        csv_rows.append(_csv(f"table2/deepfm/{rule}/b{b}",
+                             rec["us_per_step"], f"auc={fmt_auc(rec)}"))
+    t3 = tables.table3_prev_best_vs_cowclip()
+    for b, rec in t3.items():
+        csv_rows.append(_csv(f"table3/b{b}", 0.0,
+                             f"prev={100*rec['prev_best']:.2f};"
+                             f"cowclip={100*rec['cowclip']:.2f}"))
+    t5 = tables.table5_models()
+    for (model, b), rec in t5.items():
+        csv_rows.append(_csv(f"table5/{model}/cowclip/b{b}",
+                             rec["us_per_step"], f"auc={fmt_auc(rec)}"))
+    t6 = tables.table6_throughput()
+    for b, rec in t6.items():
+        csv_rows.append(_csv(f"table6/deepfm/b{b}", rec["us_per_step"],
+                             f"speedup={rec['speedup']:.2f}x"))
+    t7 = tables.table7_ablation()
+    for kind, rec in t7.items():
+        csv_rows.append(_csv(f"table7/{kind}", rec["us_per_step"],
+                             f"auc={fmt_auc(rec)}"))
+    t7b = tables.table7b_stress_ablation()
+    for kind, rec in t7b.items():
+        csv_rows.append(_csv(f"table7b_stress/{kind}", rec["us_per_step"],
+                             f"auc={fmt_auc(rec)};ll={rec['logloss']:.3f}"))
+
+    t14 = tables.table14_components()
+    for name, rec in t14.items():
+        csv_rows.append(_csv(f"table14/{name.replace(' ', '_')}",
+                             rec["us_per_step"], f"auc={fmt_auc(rec)}"))
+
+    csv_rows.extend(kernel_microbench())
+
+    print("\nname,us_per_call,derived")
+    for row in csv_rows:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

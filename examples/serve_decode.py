@@ -1,0 +1,62 @@
+"""Serving example: batched greedy decoding with per-family KV/recurrent
+caches — full attention, sliding-window ring buffers (gemma3 family), and
+O(1) SSM state (rwkv6/zamba2 families) behind one ``serve_step`` API.
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch gemma3-12b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.models import lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch))
+    print(f"serving {cfg.name} (reduced): pattern={cfg.block_pattern}, "
+          f"window={cfg.window}")
+    params = lm.init(jax.random.key(0), cfg)
+
+    b = args.batch
+    prompt = jax.random.randint(jax.random.key(1), (b, args.prompt_len), 0,
+                                cfg.vocab_size)
+    max_len = args.prompt_len + args.new_tokens
+    cache = lm.init_cache(cfg, b, max_len)
+
+    step = jax.jit(lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i))
+    prefill = jax.jit(lambda p, t: lm.prefill_with_cache(p, cfg, t, max_len))
+
+    # one-shot prefill (populates every layer's KV/recurrent state), then
+    # greedy decode
+    t0 = time.perf_counter()
+    logits, cache, cur = prefill(params, prompt)
+    out = []
+    tok = jnp.argmax(logits, axis=-1)
+    for t in range(args.prompt_len, max_len):
+        out.append(tok)
+        logits, cache = step(params, tok, cache, jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+
+    gen = jnp.stack(out, axis=1)
+    total = b * (max_len)
+    print(f"generated {gen.shape} tokens: {gen[0][:16].tolist()} ...")
+    print(f"{total} steps in {dt:.2f}s -> "
+          f"{b * args.new_tokens / dt:.1f} generated tok/s (CPU, reduced)")
+    assert bool(jnp.isfinite(logits).all())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro.configs — one module per assigned architecture (+ the paper's own
+DeepFM/Criteo config); see registry.ASSIGNED_ARCHS."""
+
+from .base import INPUT_SHAPES, input_specs, reduce_config, supports_long_context
+from .registry import ARCH_MODULES, ASSIGNED_ARCHS, get_config

@@ -1,0 +1,122 @@
+"""Config system: input shapes, reduced smoke variants, registry plumbing.
+
+Every assigned architecture gets one file in this package defining
+``CONFIG`` (the exact full-size spec, source cited) — selectable via
+``--arch <id>`` in the launchers. ``reduce_config`` derives the CPU-smoke
+variant (<=2 layers, d_model<=512, <=4 experts) used by per-arch tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import LMConfig
+from ..models.moe import MoEConfig
+
+
+# ---------------------------------------------------------------------------
+# the four assigned input shapes
+# ---------------------------------------------------------------------------
+
+INPUT_SHAPES = {
+    "train_4k":    {"seq_len": 4_096,   "global_batch": 256, "step": "train"},
+    "prefill_32k": {"seq_len": 32_768,  "global_batch": 32,  "step": "prefill"},
+    "decode_32k":  {"seq_len": 32_768,  "global_batch": 128, "step": "decode"},
+    "long_500k":   {"seq_len": 524_288, "global_batch": 1,   "step": "decode"},
+}
+
+# long_500k needs a sub-quadratic mixer (or sliding-window attention);
+# pure full-attention archs skip it — see DESIGN.md and EXPERIMENTS.md.
+def supports_long_context(cfg: LMConfig) -> bool:
+    kinds = set(cfg.block_pattern)
+    if kinds <= {"rwkv6", "mamba2"}:
+        return True          # O(1)-state mixers (+ zamba2's windowed shared attn)
+    if "attn" in kinds and cfg.window is None:
+        return False
+    # local/global mix: global layers hold full KV, local ones a ring buffer.
+    # Sub-quadratic compute; we run it (gemma3).
+    return "local" in kinds
+
+
+def input_specs(cfg: LMConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the shape's step fn.
+
+    No device allocation — this feeds ``jax.jit(...).lower()`` directly.
+    """
+    spec = INPUT_SHAPES[shape_name]
+    b, s = spec["global_batch"], spec["seq_len"]
+    f32 = jnp.float32
+
+    if spec["step"] == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.frontend:
+            out["prefix_emb"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix, cfg.d_model), cfg.dtype)
+        return out
+    if spec["step"] == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.frontend:
+            out["prefix_emb"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix, cfg.d_model), cfg.dtype)
+        return out
+    # decode: one token + a seq_len cache + cursor
+    from ..models import lm
+
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": cache_shapes,
+        "cur_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# reduced smoke variants
+# ---------------------------------------------------------------------------
+
+
+def reduce_config(cfg: LMConfig) -> LMConfig:
+    """Same family, toy size: 2 layers (pattern-preserving), d_model<=256,
+    vocab 512, <=4 experts — runs a forward/train step on CPU in seconds."""
+    # keep one occurrence of each distinct kind, in order
+    seen, pattern = set(), []
+    for kind in cfg.block_pattern:
+        if kind not in seen:
+            seen.add(kind)
+            pattern.append(kind)
+    pattern = tuple(pattern[:2]) or ("attn",)
+
+    kv_ratio = max(1, cfg.n_heads // cfg.n_kv_heads)
+    n_heads = 4
+    n_kv = max(1, n_heads // kv_ratio)
+    moe = None
+    if cfg.moe is not None:
+        # capacity_factor high enough that smoke-scale batches never drop
+        # tokens — keeps decode/forward bit-consistent for the smoke tests
+        # (production configs keep the realistic 1.25).
+        moe = MoEConfig(
+            n_experts=min(4, cfg.moe.n_experts),
+            top_k=min(2, cfg.moe.top_k),
+            capacity_factor=8.0,
+        )
+    return dataclasses.replace(
+        cfg,
+        n_layers=2 * len(pattern),
+        d_model=128,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=32 if cfg.head_dim else None,
+        d_ff=256,
+        vocab_size=512,
+        block_pattern=pattern,
+        window=8 if cfg.window else None,
+        moe=moe,
+        n_prefix=8 if cfg.frontend else 0,
+        compute_dtype="float32",
+        remat=False,
+        pad_attn_heads=0,
+    )

@@ -1,0 +1,26 @@
+"""deepfm-criteo — the paper's own experimental config (DeepFM on Criteo).
+
+Criteo: 26 categorical fields, 13 continuous; emb dim 10, MLP 3x400,
+base batch 1K, Adam lr 1e-4, L2 1e-5 (paper 'Implementation details').
+Criteo vocab sizes follow the standard DeepCTR preprocessing scale
+(~1.1M total ids; exact sizes vary by min-count threshold — here the
+common hashed layout).
+"""
+
+from ..models.ctr import CTRConfig
+
+# Representative per-field vocab sizes for Criteo after standard filtering
+# (34 -> 1.4M ids per field; total ~37M ids ~ 372M params at dim 10).
+CRITEO_VOCABS = (
+    1461, 584, 10131227, 2202608, 306, 24, 12518, 634, 4, 93146,
+    5684, 8351593, 3195, 28, 14993, 5461306, 11, 5653, 2173, 4,
+    7046547, 18, 16, 286181, 105, 142572,
+)
+
+CONFIG = CTRConfig(
+    name="deepfm",
+    vocab_sizes=CRITEO_VOCABS,
+    n_dense=13,
+    emb_dim=10,
+    mlp_dims=(400, 400, 400),
+)

@@ -1,0 +1,30 @@
+"""repro.core — the paper's contribution: CowClip + scaling rules + optimizer
+substrate (built from scratch; optax is not available offline)."""
+
+from .builders import build_optimizer, label_params, two_group
+from .cowclip import (
+    cowclip,
+    cowclip_table,
+    clip_table_global,
+    clip_table_columnwise_const,
+    clip_table_fieldwise_adaptive,
+    make_clip_transform,
+)
+from .optim import (
+    GradientTransformation,
+    adam,
+    add_decayed_weights,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    global_norm,
+    identity,
+    partition,
+    scale,
+    scale_by_adam,
+    scale_by_neg_lr,
+    scale_by_schedule,
+    sgd,
+)
+from .scaling import RULES, Hyperparams, scale_hyperparams
+from . import schedules

@@ -1,0 +1,301 @@
+"""From-scratch gradient-transformation algebra (optax-style, pure JAX).
+
+optax is not available offline, so the framework carries its own minimal but
+complete optimizer substrate: composable ``GradientTransformation``s, the
+standard optimizers (SGD / Adam / AdamW-style L2), schedules, and a
+``partition`` combinator used to run the paper's two parameter groups
+(embedding tables vs. dense tower) under different rules.
+
+Conventions
+-----------
+* ``update`` returns *updates* to be **added** to params (they already carry
+  the negative sign after ``scale_by_neg_lr``).
+* Extra per-step side inputs (CowClip's per-id batch counts) flow through the
+  keyword-only ``**extras`` channel; transforms ignore extras they don't use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class GradientTransformation(NamedTuple):
+    """A pair of pure functions ``(init, update)``.
+
+    init:   params -> state
+    update: (grads, state, params, **extras) -> (updates, state)
+    """
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+
+
+class EmptyState(NamedTuple):
+    pass
+
+
+def identity() -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None, **extras):
+        del params, extras
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+# ---------------------------------------------------------------------------
+# elementary transforms
+# ---------------------------------------------------------------------------
+
+
+class ScaleState(NamedTuple):
+    pass
+
+
+def scale(step_size: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ScaleState()
+
+    def update_fn(updates, state, params=None, **extras):
+        del params, extras
+        return jax.tree.map(lambda g: step_size * g, updates), state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray  # int32 scalar
+
+
+def scale_by_schedule(schedule: Schedule) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return ScaleByScheduleState(count=jnp.zeros([], jnp.int32))
+
+    def update_fn(updates, state, params=None, **extras):
+        del params, extras
+        step_size = schedule(state.count)
+        updates = jax.tree.map(lambda g: step_size * g, updates)
+        return updates, ScaleByScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def scale_by_neg_lr(lr: ScalarOrSchedule) -> GradientTransformation:
+    if callable(lr):
+        return scale_by_schedule(lambda c: -lr(c))
+    return scale(-lr)
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def scale_by_adam(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> GradientTransformation:
+    """Standard Adam preconditioner with bias correction (Kingma & Ba 2015)."""
+
+    def init_fn(params):
+        mu = jax.tree.map(jnp.zeros_like, params)
+        nu = jax.tree.map(jnp.zeros_like, params)
+        return ScaleByAdamState(count=jnp.zeros([], jnp.int32), mu=mu, nu=nu)
+
+    def update_fn(updates, state, params=None, **extras):
+        del params, extras
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1.0 - b1) * g, state.mu, updates)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g), state.nu, updates
+        )
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1.0 - b1**c)
+        nu_hat_scale = 1.0 / (1.0 - b2**c)
+        updates = jax.tree.map(
+            lambda m, v: (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps),
+            mu,
+            nu,
+        )
+        return updates, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    """L2 regularization *through* the optimizer: g <- g + lambda * w.
+
+    Matches the paper's setup: L2 loss ``(lambda/2)||w||^2`` contributes
+    ``lambda * w`` to the gradient which then passes through Adam (this is the
+    behaviour the paper's lambda-scaling analysis assumes, NOT decoupled
+    AdamW decay).
+    """
+
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None, **extras):
+        del extras
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        updates = jax.tree.map(lambda g, w: g + weight_decay * w, updates, params)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros([], jnp.float32)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init_fn(params):
+        del params
+        return EmptyState()
+
+    def update_fn(updates, state, params=None, **extras):
+        del params, extras
+        gnorm = global_norm(updates)
+        scale_factor = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        updates = jax.tree.map(lambda g: g * scale_factor, updates)
+        return updates, state
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+# ---------------------------------------------------------------------------
+# combinators
+# ---------------------------------------------------------------------------
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init_fn(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update_fn(updates, state, params=None, **extras):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params, **extras)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+class PartitionState(NamedTuple):
+    inner_states: dict
+
+
+def partition(
+    transforms: dict,
+    label_fn: Callable[[PyTree], PyTree],
+) -> GradientTransformation:
+    """Apply a different transformation per labelled parameter group.
+
+    ``label_fn(params)`` returns a pytree of string labels with the same
+    structure as ``params``. Extras are forwarded to every group (each group's
+    transform picks what it needs); pytree-shaped extras must be passed
+    pre-partitioned as ``{label: extra_subtree}`` via ``partitioned_extras``.
+    """
+
+    group_names = tuple(sorted(transforms))
+
+    def _masked(tree, labels, name):
+        return jax.tree.map(
+            lambda x, lbl: x if lbl == name else None,
+            tree,
+            labels,
+            is_leaf=lambda x: x is None,
+        )
+
+    def _merge(trees, labels):
+        def pick(lbl, *vals):
+            return vals[group_names.index(lbl)]
+
+        return jax.tree.map(pick, labels, *trees, is_leaf=lambda x: x is None)
+
+    def init_fn(params):
+        labels = label_fn(params)
+        states = {
+            name: transforms[name].init(_masked(params, labels, name))
+            for name in group_names
+        }
+        return PartitionState(inner_states=states)
+
+    def update_fn(updates, state, params=None, *, partitioned_extras=None, **extras):
+        labels = label_fn(updates)
+        new_states = {}
+        outs = []
+        for name in group_names:
+            sub_updates = _masked(updates, labels, name)
+            sub_params = None if params is None else _masked(params, labels, name)
+            group_extras = dict(extras)
+            if partitioned_extras and name in partitioned_extras:
+                group_extras.update(partitioned_extras[name])
+            out, new_s = transforms[name].update(
+                sub_updates, state.inner_states[name], sub_params, **group_extras
+            )
+            outs.append(out)
+            new_states[name] = new_s
+        merged = _merge(outs, labels)
+        return merged, PartitionState(inner_states=new_states)
+
+    return GradientTransformation(init_fn, update_fn)
+
+
+# ---------------------------------------------------------------------------
+# canned optimizers
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: ScalarOrSchedule, l2: float = 0.0) -> GradientTransformation:
+    steps = []
+    if l2:
+        steps.append(add_decayed_weights(l2))
+    steps.append(scale_by_neg_lr(lr))
+    return chain(*steps)
+
+
+def adam(
+    lr: ScalarOrSchedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    l2: float = 0.0,
+) -> GradientTransformation:
+    steps = []
+    if l2:
+        steps.append(add_decayed_weights(l2))
+    steps.append(scale_by_adam(b1=b1, b2=b2, eps=eps))
+    steps.append(scale_by_neg_lr(lr))
+    return chain(*steps)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params,
+        updates,
+        is_leaf=lambda x: x is None,
+    )

@@ -1,0 +1,41 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def schedule(count):
+        return jnp.asarray(value, jnp.float32)
+
+    return schedule
+
+
+def linear_warmup(base: float, warmup_steps: int):
+    """Linear 0 -> base over ``warmup_steps``, then constant.
+
+    The paper applies one-epoch warmup to the *dense* weights only (warmup on
+    embedding LR showed no benefit — Appendix 'Additional Implementation
+    Details')."""
+    if warmup_steps <= 0:
+        return constant(base)
+
+    def schedule(count):
+        frac = jnp.minimum(1.0, (count.astype(jnp.float32) + 1.0) / warmup_steps)
+        return base * frac
+
+    return schedule
+
+
+def cosine_decay(base: float, total_steps: int, warmup_steps: int = 0, floor: float = 0.0):
+    def schedule(count):
+        c = count.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (c + 1.0) / jnp.maximum(1.0, warmup_steps))
+        t = jnp.clip(
+            (c - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base * warm * cos
+
+    return schedule

@@ -1,0 +1,9 @@
+"""repro.data — synthetic Zipf CTR generator, Criteo loader, LM token stream."""
+
+from .criteo import load_criteo_tsv
+from .synthetic import (
+    CTRDataset,
+    iterate_batches,
+    make_ctr_dataset,
+    make_lm_tokens,
+)

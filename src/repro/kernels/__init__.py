@@ -1,0 +1,9 @@
+"""repro.kernels — Pallas TPU kernels for the paper's compute hot-spots.
+
+cowclip/ : fused CowClip + L2 + Adam embedding-row update (bandwidth-bound)
+wkv6/    : chunked RWKV-6 linear-attention scan (MXU-bound)
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True off-TPU), ref.py (pure-jnp oracle).
+"""
+

@@ -1,0 +1,1 @@
+from .ops import fused_cowclip_adam, reference

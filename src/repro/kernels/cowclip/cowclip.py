@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused CowClip + coupled-L2 + Adam embedding update.
+
+The paper's training hot spot is the embedding optimizer chain — 99.9% of all
+parameters flow through clip → L2 → Adam → apply every step. Executed as
+separate XLA ops this is five HBM round-trips over three table-sized arrays
+(w, m, v) plus the gradient; fused in one kernel it is a single
+read-modify-write pass: per grid step, one ``[BLOCK_ROWS, D]`` tile of each
+of (w, g, m, v) streams HBM -> VMEM, the whole update happens in VMEM/VREGs,
+and (w, m, v) stream back. Arithmetic intensity is O(1) FLOP/byte — this is
+a pure bandwidth kernel, so minimizing HBM traffic IS the optimization
+(DESIGN.md §3 hardware adaptation).
+
+Row-parallel: an id's embedding row never interacts with another row
+(CowClip's per-id threshold), so the grid tiles rows; the row dim maps to
+TPU sublanes and the feature dim to the 128-wide lanes. All math in f32.
+
+Step math (one row, matching ``ref.py`` / ``core.cowclip`` + ``core.optim``):
+
+    clip_t = cnt * max(r * ||w||, zeta)
+    g     <- g * min(1, clip_t / ||g||)          # CowClip (Alg. 1)
+    g     <- g + l2 * w                          # coupled L2 (paper setup)
+    m     <- b1*m + (1-b1)*g ;  v <- b2*v + (1-b2)*g^2
+    w     <- w - lr * (m/(1-b1^t)) / (sqrt(v/(1-b2^t)) + eps)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(bc_ref, w_ref, g_ref, cnt_ref, m_ref, v_ref,
+            w_out, m_out, v_out, *, r, zeta, lr, l2, b1, b2, eps, do_clip):
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    cnt = cnt_ref[...].astype(jnp.float32)          # [BLOCK_ROWS]
+    bc1 = bc_ref[0, 0]                              # 1/(1-b1^t)
+    bc2 = bc_ref[0, 1]                              # 1/(1-b2^t)
+
+    if do_clip:
+        gnorm = jnp.sqrt(jnp.sum(g * g, axis=-1))   # [BLOCK_ROWS]
+        wnorm = jnp.sqrt(jnp.sum(w * w, axis=-1))
+        clip_t = cnt * jnp.maximum(r * wnorm, zeta)
+        scale = jnp.minimum(1.0, clip_t / (gnorm + 1e-30))
+        g = g * scale[:, None]
+
+    g = g + l2 * w
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    upd = (m * bc1) / (jnp.sqrt(v * bc2) + eps)
+    w = w - lr * upd
+
+    w_out[...] = w.astype(w_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+    v_out[...] = v.astype(v_out.dtype)
+
+
+def cowclip_adam_update(
+    w: jnp.ndarray,          # [V, D] table
+    g: jnp.ndarray,          # [V, D] task-loss gradient
+    cnt: jnp.ndarray,        # [V]    per-id batch occurrence counts
+    m: jnp.ndarray,          # [V, D] Adam first moment
+    v: jnp.ndarray,          # [V, D] Adam second moment
+    step: jnp.ndarray,       # scalar int32, 1-based
+    *,
+    r: float = 1.0,
+    zeta: float = 1e-5,
+    lr: float = 1e-4,
+    l2: float = 1e-5,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    block_rows: int = 0,
+    interpret: bool = False,
+):
+    """Fused CowClip+L2+Adam. Returns (w_new, m_new, v_new)."""
+    vocab, dim = w.shape
+    if block_rows <= 0:
+        # target ~2 MB VMEM across the 7 resident [rows, D] f32 tiles
+        block_rows = max(8, min(1024, (1 << 19) // max(dim, 1)))
+    block_rows = min(block_rows, vocab)
+    n_blocks = pl.cdiv(vocab, block_rows)
+
+    t = step.astype(jnp.float32)
+    bc = jnp.stack(
+        [1.0 / (1.0 - b1**t), 1.0 / (1.0 - b2**t)]
+    ).reshape(1, 2)
+
+    kernel = functools.partial(
+        _kernel, r=r, zeta=zeta, lr=lr, l2=l2, b1=b1, b2=b2, eps=eps,
+        # paper: 1-dim LR-stream tables are exempt from CowClip (matches
+        # core.cowclip.cowclip_table and ref.py)
+        do_clip=dim >= 2,
+    )
+    row_block = pl.BlockSpec((block_rows, dim), lambda i: (i, 0))
+    cnt_block = pl.BlockSpec((block_rows,), lambda i: (i,))
+    bc_block = pl.BlockSpec((1, 2), lambda i: (0, 0))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[bc_block, row_block, row_block, cnt_block, row_block, row_block],
+        out_specs=[row_block, row_block, row_block],
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        interpret=interpret,
+    )(bc, w, g, cnt, m, v)

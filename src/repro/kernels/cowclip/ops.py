@@ -1,0 +1,39 @@
+"""jit'd public wrapper for the fused CowClip update.
+
+``fused_cowclip_adam`` dispatches to the Pallas kernel (interpret mode on
+CPU — executes the kernel body in Python for correctness; compiled Mosaic on
+real TPU), with the pure-jnp oracle available as ``reference``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .cowclip import cowclip_adam_update
+from .ref import cowclip_adam_reference as reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "r", "zeta", "lr", "l2", "b1", "b2", "eps", "block_rows", "use_kernel"
+    ),
+)
+def fused_cowclip_adam(
+    w, g, cnt, m, v, step, *,
+    r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
+    block_rows=0, use_kernel=True,
+):
+    if not use_kernel:
+        return reference(w, g, cnt, m, v, step, r=r, zeta=zeta, lr=lr, l2=l2,
+                         b1=b1, b2=b2, eps=eps)
+    return cowclip_adam_update(
+        w, g, cnt, m, v, step, r=r, zeta=zeta, lr=lr, l2=l2, b1=b1, b2=b2,
+        eps=eps, block_rows=block_rows, interpret=not _on_tpu(),
+    )

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused CowClip+L2+Adam kernel.
+
+Composes the framework's own building blocks (``core.cowclip.cowclip_table``
++ coupled L2 + Adam with bias correction) so the kernel is checked against
+the exact math the optimizer substrate uses.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.cowclip import cowclip_table
+
+
+def cowclip_adam_reference(
+    w, g, cnt, m, v, step, *,
+    r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
+):
+    w32 = w.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    g32 = cowclip_table(g32, w32, cnt, r=r, zeta=zeta)
+    g32 = g32 + l2 * w32
+
+    m32 = b1 * m.astype(jnp.float32) + (1.0 - b1) * g32
+    v32 = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(g32)
+    t = step.astype(jnp.float32)
+    m_hat = m32 / (1.0 - b1**t)
+    v_hat = v32 / (1.0 - b2**t)
+    w32 = w32 - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return w32.astype(w.dtype), m32.astype(m.dtype), v32.astype(v.dtype)

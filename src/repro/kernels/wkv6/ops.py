@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the chunked WKV6 scan (interpret off-TPU)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import wkv6_reference as reference
+from .wkv6 import chunked_wkv6
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def wkv6(r, k, v, w, u, *, chunk=16, use_kernel=True):
+    if not use_kernel:
+        return reference(r, k, v, w, u)
+    return chunked_wkv6(r, k, v, w, u, chunk=chunk, interpret=not _on_tpu())

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the chunked WKV6 kernel: the exact sequential scan.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_reference(r, k, v, w, u):
+    """r/k/v/w: [BH, S, N]; u: [BH, N]. Returns (y [BH,S,N], S [BH,N,N])."""
+    bh, s, n = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                       # [BH, N] each
+        kv = kt[:, :, None] * vt[:, None, :]       # [BH, N, N]
+        y = jnp.einsum(
+            "bn,bnm->bm", rt, state + u[:, :, None] * kv
+        )
+        state = wt[:, :, None] * state + kv
+        return state, y
+
+    s0 = jnp.zeros((bh, n, n), jnp.float32)
+    xs = tuple(jnp.swapaxes(t, 0, 1).astype(jnp.float32) for t in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.swapaxes(ys, 0, 1).astype(r.dtype), s_fin

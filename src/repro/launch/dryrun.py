@@ -1,0 +1,350 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, with NO device allocation (ShapeDtypeStruct stand-ins).
+
+Proves the distribution config is coherent: sharding rules cover every
+param/state leaf, the step functions partition under SPMD, and the compiled
+module's memory/cost/collective profile feeds EXPERIMENTS.md §Dry-run and
+§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepfm-criteo --shape ctr_128k
+"""
+
+# The VERY FIRST lines, before any other import (jax locks the device count
+# at first init): 512 simulated host devices so jax.make_mesh can build the
+# production meshes. This env var is set here and ONLY here — smoke tests and
+# benchmarks must see 1 device.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    get_config,
+    input_specs,
+    supports_long_context,
+)
+from ..core import apply_updates, build_optimizer, scale_hyperparams
+from ..models import ctr as ctr_lib, embedding, lm
+from ..sharding.specs import (
+    infer_cache_shardings,
+    infer_param_shardings,
+)
+from . import hlo_analysis
+from .mesh import make_production_mesh
+
+
+# --------------------------------------------------------------------------
+# step functions under dry-run
+# --------------------------------------------------------------------------
+
+
+def _make_lm_optimizer(cfg: lm.LMConfig):
+    """The paper's technique, applied to the LM token table: CowClip on the
+    embedding group, sqrt-scaled Adam on the dense tower."""
+    # LM batch is counted in tokens (the id-occurrence unit CowClip scales by)
+    shape = INPUT_SHAPES["train_4k"]
+    token_batch = shape["global_batch"] * shape["seq_len"]
+    hp = scale_hyperparams(
+        "cowclip", base_lr=1e-4, base_l2=1e-5, base_batch=1024,
+        batch_size=token_batch, base_dense_lr=8e-4,
+    )
+    return build_optimizer(hp, clip_kind="adaptive_column", zeta=1e-5,
+                           warmup_steps=100)
+
+
+def make_lm_train_step(cfg: lm.LMConfig, tx, *, bf16_gather: bool = None):
+    """``bf16_gather=True`` casts the dense (FSDP-sharded) params to bf16
+    under a sharding constraint BEFORE the forward, so the SPMD partitioner
+    gathers 2-byte weights instead of 4-byte masters (§Perf beyond-paper
+    optimization; masters and the optimizer stay f32). Default: env
+    REPRO_BF16_GATHER=1."""
+    if bf16_gather is None:
+        bf16_gather = os.environ.get("REPRO_BF16_GATHER", "0") == "1"
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            if bf16_gather:
+                from ..sharding.act import current_mesh
+                from ..sharding.specs import infer_param_shardings
+
+                dense16 = jax.tree.map(
+                    lambda x: x.astype(jnp.bfloat16)
+                    if x.dtype == jnp.float32 else x,
+                    p["dense"],
+                )
+                mesh = current_mesh()
+                if mesh is not None:
+                    dense16 = jax.lax.with_sharding_constraint(
+                        dense16, infer_param_shardings(dense16, mesh))
+                p = {"embed": p["embed"], "dense": dense16}
+            return lm.loss_fn(p, cfg, batch["tokens"], batch.get("prefix_emb"))[0]
+
+        loss_val, grads = jax.value_and_grad(loss)(params)
+        counts = {
+            "tokens": embedding.token_counts(batch["tokens"], cfg.padded_vocab)
+        }
+        updates, opt_state = tx.update(grads, opt_state, params, counts=counts)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss_val
+
+    return train_step
+
+
+def make_lm_prefill(cfg: lm.LMConfig):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch["tokens"], batch.get("prefix_emb"))
+
+    return prefill_step
+
+
+def make_lm_decode(cfg: lm.LMConfig):
+    def serve_step(params, cache, token, cur_index):
+        return lm.decode_step(params, cfg, token, cache, cur_index)
+
+    return serve_step
+
+
+def _batch_sharding(tree, mesh):
+    d = ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+    def leaf_sharding(leaf):
+        b = leaf.shape[0]
+        dsize = mesh.shape["data"] * (mesh.shape.get("pod", 1) if "pod" in mesh.axis_names else 1)
+        first = d if b % dsize == 0 else None
+        return NamedSharding(mesh, P(first, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree.map(leaf_sharding, tree)
+
+
+# --------------------------------------------------------------------------
+# dry-run core
+# --------------------------------------------------------------------------
+
+
+def lower_for(cfg, shape_name: str, mesh):
+    """Build and lower the step function for (cfg, shape) on ``mesh``.
+
+    Returns the jax ``Lowered`` object. Shared by the dry-run CLI and the
+    roofline depth-differencing pass (benchmarks/roofline.py).
+    """
+    spec = INPUT_SHAPES[shape_name]
+    if spec["step"] == "train":
+        # activation checkpointing at superblock granularity for training
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, remat=True)
+
+    params_shapes = jax.eval_shape(lambda: lm.init(jax.random.key(0), cfg))
+    p_shard = infer_param_shardings(params_shapes, mesh)
+    specs = input_specs(cfg, shape_name)
+
+    if spec["step"] == "train":
+        tx = _make_lm_optimizer(cfg)
+        opt_shapes = jax.eval_shape(tx.init, params_shapes)
+        o_shard = infer_param_shardings(opt_shapes, mesh)
+        b_shard = _batch_sharding(specs, mesh)
+        fn = jax.jit(
+            make_lm_train_step(cfg, tx),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+        )
+        with mesh:
+            return fn.lower(params_shapes, opt_shapes, specs)
+    if spec["step"] == "prefill":
+        b_shard = _batch_sharding(specs, mesh)
+        fn = jax.jit(
+            make_lm_prefill(cfg),
+            in_shardings=(p_shard, b_shard),
+        )
+        with mesh:
+            return fn.lower(params_shapes, specs)
+    # decode
+    cache_shapes = specs["cache"]
+    c_shard = infer_cache_shardings(cache_shapes, mesh)
+    tok_shard = _batch_sharding({"t": specs["token"]}, mesh)["t"]
+    fn = jax.jit(
+        make_lm_decode(cfg),
+        in_shardings=(p_shard, c_shard, tok_shard, None),
+        out_shardings=(None, c_shard),
+    )
+    with mesh:
+        return fn.lower(
+            params_shapes, cache_shapes, specs["token"], specs["cur_index"]
+        )
+
+
+def dryrun_lm(arch: str, shape_name: str, *, multi_pod: bool = False,
+              mesh=None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    spec = INPUT_SHAPES[shape_name]
+    if spec["step"] == "decode" and shape_name == "long_500k":
+        if not supports_long_context(cfg):
+            return {
+                "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "full-attention arch; long_500k requires "
+                          "sub-quadratic attention (DESIGN.md)",
+            }
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    lowered = lower_for(cfg, shape_name, mesh)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    return _report(arch, shape_name, multi_pod, cfg.n_repeats, compiled,
+                   t_lower, t_compile, lm.param_counts(cfg), verbose)
+
+
+def dryrun_ctr(shape_name: str = "ctr_128k", *, multi_pod: bool = False,
+               mesh=None, verbose: bool = True) -> dict:
+    """The paper's own model at its headline 128K batch, distributed."""
+    cfg = get_config("deepfm-criteo")
+    batch = {"ctr_128k": 131072, "ctr_8k": 8192}[shape_name]
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+
+    hp = scale_hyperparams("cowclip", base_lr=1e-4, base_l2=1e-5,
+                           base_batch=1024, batch_size=batch,
+                           base_dense_lr=8e-4)
+    tx = build_optimizer(hp, clip_kind="adaptive_column", zeta=1e-5)
+
+    params_shapes = jax.eval_shape(lambda: ctr_lib.init(jax.random.key(0), cfg))
+    opt_shapes = jax.eval_shape(tx.init, params_shapes)
+    p_shard = infer_param_shardings(params_shapes, mesh)
+    o_shard = infer_param_shardings(opt_shapes, mesh)
+    specs = {
+        "ids": jax.ShapeDtypeStruct((batch, cfg.n_fields), jnp.int32),
+        "dense": jax.ShapeDtypeStruct((batch, cfg.n_dense), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((batch,), jnp.float32),
+    }
+    b_shard = _batch_sharding(specs, mesh)
+
+    from ..train.loop import make_train_step  # single-host variant is jit'd
+    from ..train import metrics
+
+    def train_step(params, opt_state, batch_):
+        def loss_fn(p):
+            logits = ctr_lib.apply(p, cfg, batch_["ids"], batch_["dense"])
+            return metrics.logloss(logits, batch_["labels"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        counts = ctr_lib.batch_counts(cfg, batch_["ids"], params)
+        updates, opt_state = tx.update(grads, opt_state, params, counts=counts)
+        return apply_updates(params, updates), opt_state, loss
+
+    fn = jax.jit(train_step, in_shardings=(p_shard, o_shard, b_shard),
+                 out_shardings=(p_shard, o_shard, None))
+    with mesh:
+        lowered = fn.lower(params_shapes, opt_shapes, specs)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    n_params = sum(
+        __import__("math").prod(x.shape) for x in jax.tree.leaves(params_shapes)
+    )
+    return _report("deepfm-criteo", shape_name, multi_pod, 1, compiled,
+                   t_lower, t_compile, {"total": n_params, "active": n_params},
+                   verbose)
+
+
+def _report(arch, shape_name, multi_pod, loop_scale, compiled,
+            t_lower, t_compile, counts, verbose) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_stats(hlo, loop_scale=loop_scale)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "params_total": counts["total"],
+        "params_active": counts["active"],
+        "flops": float(cost.get("flops", -1)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1)) if cost else -1.0,
+        "collectives": coll,
+        "collective_bytes": sum(v["bytes"] for v in coll.values()),
+        "loop_scale": loop_scale,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        try:
+            rec[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} (multi_pod={multi_pod}): OK "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"  memory_analysis: { {k: v for k, v in rec.items() if k.endswith('_in_bytes')} }")
+        print(f"  cost_analysis: flops={rec['flops']:.3e} "
+              f"bytes={rec['bytes_accessed']:.3e}")
+        print(f"  collectives (exec-weighted bytes): {coll}")
+    return rec
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (see repro.configs), or deepfm-criteo")
+    ap.add_argument("--shape", default="train_4k",
+                    help="|".join(list(INPUT_SHAPES) + ["ctr_128k", "ctr_8k"]))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) pairs on the selected mesh")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    records = []
+    if args.all:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        for arch in ASSIGNED_ARCHS:
+            for shape_name in INPUT_SHAPES:
+                try:
+                    rec = dryrun_lm(arch, shape_name,
+                                    multi_pod=args.multi_pod, mesh=mesh)
+                except Exception as e:  # a failure here is a bug to fix
+                    rec = {"arch": arch, "shape": shape_name,
+                           "multi_pod": args.multi_pod, "status": "FAILED",
+                           "error": f"{type(e).__name__}: {e}"}
+                    print(f"[dryrun] {arch} x {shape_name}: FAILED — {e}")
+                records.append(rec)
+        records.append(dryrun_ctr("ctr_128k", multi_pod=args.multi_pod, mesh=mesh))
+    elif args.arch == "deepfm-criteo" or args.shape.startswith("ctr_"):
+        records.append(dryrun_ctr(args.shape, multi_pod=args.multi_pod))
+    else:
+        records.append(dryrun_lm(args.arch, args.shape, multi_pod=args.multi_pod))
+
+    if args.out:
+        with open(args.out, "a") as f:
+            for rec in records:
+                f.write(json.dumps(rec) + "\n")
+    bad = [r for r in records if r["status"] == "FAILED"]
+    if bad:
+        raise SystemExit(f"{len(bad)} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Parse compiled HLO text for roofline inputs.
+
+``compiled.cost_analysis()`` gives FLOPs and bytes-accessed but NOT collective
+traffic; we recover it by summing output-buffer sizes of every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op in the SPMD-partitioned module.
+
+The parser is while-loop aware: computations reached as a ``while`` op's body
+execute once per trip, so their collectives are scaled by the trip count.
+Trip counts are taken from the caller (``loop_scale`` = the scan-over-layers
+n_repeats, statically known from the config); XLA's HLO text does not always
+carry an induction-variable bound we can recover robustly.
+
+Caveats (documented in EXPERIMENTS.md §Roofline):
+* Output-buffer size is the traffic proxy per collective; ring-algorithm
+  factors (2(n-1)/n, etc.) are not applied — within ~2x, and identical
+  across the configs we compare.
+* Nested whiles (e.g. a time scan inside the layer scan) scale by the outer
+  trip count only; our sharding keeps recurrent-scan bodies collective-free,
+  which the dry-run asserts.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# an op line:  %name = bf16[16,1024]{1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*\(?\s*([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+([a-z0-9-]+)\("
+)
+_COMP_START_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+_COMP_START_SIMPLE_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def split_computations(hlo_text: str) -> dict:
+    """computation name -> list of op lines (brace-depth based)."""
+    comps: dict = {}
+    cur_name, cur_lines, depth = None, [], 0
+    for line in hlo_text.splitlines():
+        if cur_name is None:
+            if line.rstrip().endswith("{"):
+                m = _COMP_START_SIMPLE_RE.match(line)
+                if m:
+                    cur_name = m.group(1)
+                    cur_lines = []
+                    depth = line.count("{") - line.count("}")
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps[cur_name] = cur_lines
+            cur_name = None
+            continue
+        cur_lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = cur_lines
+    return comps
+
+
+def while_bodies(hlo_text: str) -> set:
+    return set(_WHILE_BODY_RE.findall(hlo_text))
+
+
+def collective_stats(hlo_text: str, loop_scale: int = 1) -> dict:
+    """{kind: {"count": n, "bytes": b}} with while-body ops scaled.
+
+    ``count`` is the static op count; ``bytes`` is execution-weighted.
+    ``*-start`` variants are counted once (``*-done`` ignored).
+    """
+    comps = split_computations(hlo_text)
+    bodies = while_bodies(hlo_text)
+    stats: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for name, lines in comps.items():
+        scale = loop_scale if name in bodies else 1
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            dtype, dims, opname = m.groups()
+            base = opname.replace("-start", "")
+            if opname.endswith("-done") or base not in COLLECTIVES:
+                continue
+            stats[base]["count"] += 1
+            stats[base]["bytes"] += scale * _nbytes(dtype, dims)
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str, loop_scale: int = 1) -> int:
+    return sum(v["bytes"] for v in collective_stats(hlo_text, loop_scale).values())
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

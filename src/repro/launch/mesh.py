@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Target: TPU v5e pods — 256 chips per pod arranged (16, 16) as
+("data", "model"); multi-pod doubles up with a leading "pod" axis that the
+sharding rules fold into the batch/FSDP group.
+
+Defined as functions (never module-level constants) so importing this module
+cannot touch jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init, and smoke tests/benches must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names — lets the same pjit'd
+    code paths run on the CPU container for smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# v5e hardware constants used by the roofline (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+CHIPS_PER_POD = 256

@@ -1,0 +1,5 @@
+"""repro.models — CTR models (paper baselines) + LM substrate (assigned archs)."""
+
+from . import ctr, embedding, layers, lm, mamba, moe, rwkv
+from .lm import LMConfig
+from .moe import MoEConfig

@@ -1,0 +1,76 @@
+"""Embedding substrate: per-field tables, lookup, and batch id counts.
+
+The embedding layer is where CowClip lives (99.9% of CTR model params, paper
+Table 1). Layout decisions:
+
+* One table per categorical field, ``[vocab_f, dim]`` — an id's vector is a
+  *row* (the paper's "column"). Tables live under ``params["embed"]``.
+* Batch occurrence counts (the ``cnt`` in Alg. 1 line 7) are a single
+  ``segment_sum`` per field — dense, TPU-friendly, fuses with the backward
+  scatter-add.
+* Forward lookup is ``jnp.take`` (gather); under pjit with row-sharded tables
+  XLA partitions this into the standard all-gather-free dynamic-slice +
+  all-reduce pattern.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def init_field_tables(
+    key: jax.Array,
+    vocab_sizes: Sequence[int],
+    dim: int,
+    sigma: float = 1e-4,
+    dtype=jnp.float32,
+) -> dict:
+    """N(0, sigma) tables, one per field (paper: sigma=1e-4 base, 1e-2 for
+    CowClip's larger-init variant)."""
+    keys = jax.random.split(key, len(vocab_sizes))
+    return {
+        f"field_{i}": (sigma * jax.random.normal(k, (v, dim))).astype(dtype)
+        for i, (k, v) in enumerate(zip(keys, vocab_sizes))
+    }
+
+
+def lookup(tables: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    """Gather per-field embeddings.
+
+    Args:
+      tables: {"field_i": [vocab_i, dim]}
+      ids:    [batch, n_fields] int32
+    Returns:
+      [batch, n_fields, dim]
+    """
+    cols = [
+        jnp.take(tables[f"field_{i}"], ids[:, i], axis=0)
+        for i in range(ids.shape[1])
+    ]
+    return jnp.stack(cols, axis=1)
+
+
+def field_counts(ids: jnp.ndarray, vocab_sizes: Sequence[int]) -> dict:
+    """Per-field id occurrence counts in the batch (CowClip's ``cnt``).
+
+    Returns a tree matching the tables tree with [vocab_f] float32 leaves.
+    """
+    b = ids.shape[0]
+    ones = jnp.ones((b,), jnp.float32)
+    return {
+        f"field_{i}": jax.ops.segment_sum(
+            ones, ids[:, i], num_segments=v
+        )
+        for i, v in enumerate(vocab_sizes)
+    }
+
+
+def token_counts(tokens: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
+    """Occurrence counts of each vocab id in an LM batch ([B, S] int32)."""
+    flat = tokens.reshape(-1)
+    return jax.ops.segment_sum(
+        jnp.ones_like(flat, jnp.float32), flat, num_segments=vocab_size
+    )

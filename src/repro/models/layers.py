@@ -1,0 +1,249 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA/MQA attention (full /
+sliding-window, train + prefill + single-token decode), MLP / SwiGLU.
+
+Conventions
+-----------
+* Params are plain dicts of arrays; init fns take an explicit PRNG key.
+* Activations run in ``compute_dtype`` (bf16 on TPU), params stay f32;
+  norms/softmax accumulate in f32.
+* Attention layouts: q ``[B, S, H, hd]``, kv ``[B, S, K, hd]`` with
+  ``G = H // K`` query groups per kv head.
+* Decode caches are fixed-capacity buffers with a write cursor; sliding-window
+  layers use a ring buffer of exactly ``window`` slots so long-context decode
+  memory is O(window), not O(S).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms & positional encoding
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # [hd/2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, N, hd]; positions: [B, S] (absolute token positions)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                    # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs        # [B,S,hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, n_heads_alloc: int | None = None) -> dict:
+    """``n_heads_alloc`` > n_heads pads the head dim for sharding (e.g.
+    56 query heads -> 64 so heads divide a 16-way model axis). Padded heads
+    are masked to zero in the forward (see ``_grouped_attn``), so semantics
+    and gradients are EXACTLY those of the unpadded model."""
+    h = n_heads_alloc or n_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d_model)
+    return {
+        "wq": (jax.random.normal(kq, (d_model, h, head_dim)) * s).astype(jnp.float32),
+        "wk": (jax.random.normal(kk, (d_model, n_kv_heads, head_dim)) * s).astype(jnp.float32),
+        "wv": (jax.random.normal(kv, (d_model, n_kv_heads, head_dim)) * s).astype(jnp.float32),
+        "wo": (jax.random.normal(ko, (h, head_dim, d_model))
+               * (1.0 / jnp.sqrt(n_heads * head_dim))).astype(jnp.float32),
+    }
+
+
+def _qkv(params, x, positions, theta, dtype):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _causal_mask(s_q: int, s_k: int, window: Optional[int]) -> jnp.ndarray:
+    """[s_q, s_k] additive mask. Queries are the last s_q of s_k positions."""
+    q_pos = jnp.arange(s_q)[:, None] + (s_k - s_q)
+    k_pos = jnp.arange(s_k)[None, :]
+    ok = k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _grouped_attn(q, k, v, mask, n_valid: int | None = None):
+    """q: [B,Sq,H,hd], k/v: [B,Sk,K,hd], mask: broadcastable to [B,K,G,Sq,Sk].
+
+    ``n_valid`` masks sharding-padded query heads to zero output (their wo
+    contribution AND their gradients vanish -> padding is semantics-exact)."""
+    b, sq, h, hd = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, sq, kheads, g, hd)
+    scores = jnp.einsum("bqkgd,bpkd->bkgqp", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32) + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqp,bpkd->bqkgd", probs, v)
+    out = out.reshape(b, sq, h, hd)
+    if n_valid is not None and n_valid < h:
+        head_ok = (jnp.arange(h) < n_valid)[None, None, :, None]
+        out = out * head_ok.astype(out.dtype)
+    return out
+
+
+def attention_train(params, x, *, theta: float, window: Optional[int] = None,
+                    n_valid_heads: Optional[int] = None):
+    """Full training/prefill attention over [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    dtype = x.dtype
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(params, x, positions, theta, dtype)
+    mask = _causal_mask(s, s, window)[None, None, None]
+    out = _grouped_attn(q, k, v, mask, n_valid_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+class KVCache(NamedTuple):
+    """Fixed-capacity KV cache. ``capacity == window`` makes it a ring."""
+
+    k: jnp.ndarray        # [B, cap, K, hd]
+    v: jnp.ndarray        # [B, cap, K, hd]
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, capacity, n_kv_heads, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def attention_decode(
+    params,
+    x: jnp.ndarray,            # [B, 1, D]
+    cache: KVCache,
+    cur_index: jnp.ndarray,    # scalar int32: number of tokens already cached
+    *,
+    theta: float,
+    window: Optional[int] = None,
+    n_valid_heads: Optional[int] = None,
+):
+    """One decode step. Returns ([B,1,D], new_cache).
+
+    With ``window`` set, the cache is a ring buffer of ``window`` slots and
+    attention covers at most the last ``window`` positions; otherwise the
+    cache is a linear buffer of full capacity.
+    """
+    b, one, d = x.shape
+    dtype = x.dtype
+    positions = jnp.full((b, 1), cur_index, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, positions, theta, dtype)
+
+    cap = cache.capacity
+    slot = (cur_index % cap).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+
+    # validity per slot: slot index corresponds to absolute position
+    #   pos = idx            (linear buffer)
+    #   pos = latest ring content (ring buffer)
+    idx = jnp.arange(cap)
+    if window is None:
+        valid = idx <= cur_index
+    else:
+        # ring: slot i holds position p where p % cap == i and p <= cur_index
+        # and p > cur_index - window  (cap == window by construction)
+        valid = (idx <= cur_index) | (cur_index >= cap)
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, None, None, None, :]
+    out = _grouped_attn(q, k.astype(dtype), v.astype(dtype), mask, n_valid_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, KVCache(k=k, v=v)
+
+
+def attention_prefill(params, x, cache: KVCache, *, theta: float,
+                      window: Optional[int] = None,
+                      n_valid_heads: Optional[int] = None):
+    """Prefill: full forward AND populate the cache (first ``S`` slots, or the
+    last ``window`` tokens for ring caches). Returns ([B,S,D], cache)."""
+    b, s, d = x.shape
+    dtype = x.dtype
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(params, x, positions, theta, dtype)
+    mask = _causal_mask(s, s, window)[None, None, None]
+    out = _grouped_attn(q, k, v, mask, n_valid_heads)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+    cap = cache.capacity
+    if cap >= s:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1)
+    else:
+        # ring cache: keep the last ``cap`` tokens, laid out so that
+        # slot i holds position p with p % cap == i.
+        tail_k, tail_v = k[:, s - cap :], v[:, s - cap :]
+        shift = (s - cap) % cap
+        new_k = jnp.roll(tail_k, shift, axis=1).astype(cache.k.dtype)
+        new_v = jnp.roll(tail_v, shift, axis=1).astype(cache.v.dtype)
+    return y, KVCache(k=new_k, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# feed-forward
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_out = 1.0 / jnp.sqrt(d_ff)
+    p = {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(jnp.float32),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(jnp.float32),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(jnp.float32)
+    return p
+
+
+def mlp(params: dict, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    dtype = x.dtype
+    h = x @ params["w_in"].astype(dtype)
+    if act == "swiglu":
+        g = x @ params["w_gate"].astype(dtype)
+        h = jax.nn.silu(g) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return h @ params["w_out"].astype(dtype)

@@ -1,0 +1,543 @@
+"""Generic decoder LM assembled from a config — the substrate for the 10
+assigned architectures.
+
+Design choices that matter at framework scale:
+
+* **Scan over superblocks.** Layers are grouped into a repeating
+  ``block_pattern`` (e.g. gemma3's 5 local + 1 global); params are stacked
+  ``[n_repeats, ...]`` and the stack is driven by ``jax.lax.scan``, so HLO
+  size — and dry-run compile time for 512 simulated devices — is independent
+  of depth.
+* **Heterogeneous mixers.** Pattern entries pick the mixer per position:
+  ``attn`` (full GQA/MQA), ``local`` (sliding-window), ``rwkv6``, ``mamba2``.
+  zamba2's weight-shared attention block is closure-captured (not stacked)
+  and applied at the end of every superblock.
+* **Two-group params.** ``{"embed": {"tokens": [V, D]}, "dense": ...}`` so the
+  CowClip optimizer treats the token table exactly like a CTR field table.
+* **Decode states.** KV ring buffers for ``local``, linear KV for ``attn``,
+  O(1) recurrent states for ``rwkv6``/``mamba2`` — stacked per superblock and
+  scanned alongside params.
+* Modality frontends (audio frames / vision patches) are *precomputed
+  embeddings* ``[B, P, D]`` concatenated ahead of token embeddings (the one
+  allowed stub; see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, mamba, moe as moe_lib, rwkv
+from .moe import MoEConfig
+from ..sharding.act import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    arch_type: str                    # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    block_pattern: tuple = ("attn",)
+    window: Optional[int] = None      # sliding-window width for 'local'
+    moe: Optional[MoEConfig] = None
+    ssm_state: int = 64
+    mamba_head_dim: int = 64
+    shared_attn: bool = False         # zamba2: shared attn+mlp per superblock
+    frontend: Optional[str] = None    # 'audio' | 'vision'
+    n_prefix: int = 0
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    act: str = "swiglu"
+    emb_sigma: float = 1e-2
+    compute_dtype: str = "bfloat16"
+    remat: bool = False
+    remat_policy: str = "full"  # "full" | "dots" (save matmul outputs)
+    wkv_backend: str = "scan"   # "scan" | "chunked" (jnp twin of kernels/wkv6)
+    logits_dtype: str = "float32"   # "bfloat16": keep logits in compute dtype
+    scan_unroll: bool = False   # unroll the layer scan (FLOP-accounting runs)
+    pad_attn_heads: int = 0     # pad query heads to this multiple for TP
+                                # sharding (semantics-exact masking; §Perf)
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_heads_alloc(self) -> int:
+        if not self.pad_attn_heads:
+            return self.n_heads
+        m = self.pad_attn_heads
+        # keep GQA grouping valid: alloc must stay a multiple of kv heads
+        import math as _math
+        alloc = ((self.n_heads + m - 1) // m) * m
+        return _math.lcm(alloc, self.n_kv_heads) if alloc % self.n_kv_heads \
+            else alloc
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the token table can
+        row-shard over model x data meshes (and TPU lanes); logits beyond
+        ``vocab_size`` are masked in the loss/decode."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def n_repeats(self) -> int:
+        if self.n_layers % len(self.block_pattern):
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"pattern length {len(self.block_pattern)}"
+            )
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def validate(self) -> "LMConfig":
+        for kind in self.block_pattern:
+            if kind not in ("attn", "local", "rwkv6", "mamba2"):
+                raise ValueError(f"unknown block kind {kind!r}")
+        if "local" in self.block_pattern and not self.window:
+            raise ValueError("'local' blocks require window")
+        if self.n_heads % self.n_kv_heads:
+            raise ValueError("n_heads must be divisible by n_kv_heads")
+        return self
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_position(key, kind: str, cfg: LMConfig) -> dict:
+    """Params for one layer position of the given kind."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn", "local"):
+        p = {
+            "norm1": layers.init_rmsnorm(d),
+            "attn": layers.init_attention(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                                          cfg.hd, cfg.n_heads_alloc),
+            "norm2": layers.init_rmsnorm(d),
+        }
+        if cfg.moe is not None:
+            p["ffn"] = moe_lib.init_moe(k2, d, cfg.d_ff, cfg.moe, cfg.act)
+        else:
+            p["ffn"] = layers.init_mlp(k2, d, cfg.d_ff, cfg.act)
+        return p
+    if kind == "rwkv6":
+        return {
+            "norm1": layers.init_rmsnorm(d),
+            "att": rwkv.init_rwkv6(k1, d, cfg.n_heads),
+            "norm2": layers.init_rmsnorm(d),
+            "ffn": rwkv.init_channel_mix(k2, d, cfg.d_ff),
+        }
+    if kind == "mamba2":
+        return {
+            "norm1": layers.init_rmsnorm(d),
+            "mixer": mamba.init_mamba2(
+                k1, d, d_state=cfg.ssm_state, head_dim=cfg.mamba_head_dim
+            ),
+        }
+    raise ValueError(kind)
+
+
+def init(key: jax.Array, cfg: LMConfig) -> dict:
+    cfg.validate()
+    k_emb, k_blocks, k_shared, k_head, k_norm = jax.random.split(key, 5)
+
+    embed = {
+        "tokens": (
+            cfg.emb_sigma
+            * jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model))
+        ).astype(jnp.float32)
+    }
+
+    dense: dict = {"blocks": {}}
+    pat_keys = jax.random.split(k_blocks, len(cfg.block_pattern))
+    for i, kind in enumerate(cfg.block_pattern):
+        rep_keys = jax.random.split(pat_keys[i], cfg.n_repeats)
+        dense["blocks"][f"pos_{i}"] = jax.vmap(
+            lambda k: _init_position(k, kind, cfg)
+        )(rep_keys)
+
+    if cfg.shared_attn:
+        ks1, ks2 = jax.random.split(k_shared)
+        dense["shared"] = {
+            "norm1": layers.init_rmsnorm(cfg.d_model),
+            "attn": layers.init_attention(
+                ks1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                cfg.n_heads_alloc,
+            ),
+            "norm2": layers.init_rmsnorm(cfg.d_model),
+            "ffn": layers.init_mlp(ks2, cfg.d_model, cfg.d_ff, cfg.act),
+        }
+
+    dense["final_norm"] = layers.init_rmsnorm(cfg.d_model)
+    dense["head"] = (
+        jax.random.normal(k_head, (cfg.d_model, cfg.padded_vocab))
+        * (1.0 / jnp.sqrt(cfg.d_model))
+    ).astype(jnp.float32)
+    return {"embed": embed, "dense": dense}
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _apply_position(p, kind: str, cfg: LMConfig, x, aux):
+    """One layer forward over a full sequence."""
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else None
+        x = x + layers.attention_train(
+            p["attn"], layers.rmsnorm(p["norm1"], x, cfg.norm_eps),
+            theta=cfg.rope_theta, window=window,
+            n_valid_heads=cfg.n_heads,
+        )
+        h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            y, a = moe_lib.moe_ffn(p["ffn"], h, cfg.moe, cfg.act)
+            aux = aux + a
+        else:
+            y = layers.mlp(p["ffn"], h, cfg.act)
+        return x + y, aux
+    if kind == "rwkv6":
+        x = x + rwkv.rwkv6_train(
+            p["att"], layers.rmsnorm(p["norm1"], x, cfg.norm_eps),
+            n_heads=cfg.n_heads, backend=cfg.wkv_backend,
+        )
+        h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+        return x + rwkv.channel_mix(p["ffn"], h, h_prev), aux
+    if kind == "mamba2":
+        y = mamba.mamba2_train(
+            p["mixer"], layers.rmsnorm(p["norm1"], x, cfg.norm_eps),
+            d_state=cfg.ssm_state, head_dim=cfg.mamba_head_dim,
+        )
+        return x + y, aux
+    raise ValueError(kind)
+
+
+def _apply_shared(p, cfg: LMConfig, x):
+    x = x + layers.attention_train(
+        p["attn"], layers.rmsnorm(p["norm1"], x, cfg.norm_eps),
+        theta=cfg.rope_theta, window=cfg.window, n_valid_heads=cfg.n_heads,
+    )
+    h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    return x + layers.mlp(p["ffn"], h, cfg.act)
+
+
+def forward(
+    params: dict,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,                       # [B, S] int32
+    prefix_emb: Optional[jnp.ndarray] = None,  # [B, P, D] frontend stub
+) -> jnp.ndarray:
+    """Full-sequence forward -> logits [B, S(+P), V]."""
+    dtype = cfg.dtype
+    x = jnp.take(params["embed"]["tokens"], tokens, axis=0).astype(dtype)
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+
+    shared = params["dense"].get("shared")
+
+    def superblock(carry, block_params):
+        x, aux = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            x, aux = _apply_position(block_params[f"pos_{i}"], kind, cfg, x, aux)
+        if shared is not None:
+            x = _apply_shared(shared, cfg, x)
+        return (x, aux), None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        superblock = jax.checkpoint(superblock, policy=policy)
+
+    (x, aux), _ = jax.lax.scan(
+        superblock, (x, jnp.zeros((), jnp.float32)), params["dense"]["blocks"],
+        unroll=cfg.n_repeats if cfg.scan_unroll else 1,
+    )
+    x = layers.rmsnorm(params["dense"]["final_norm"], x, cfg.norm_eps)
+    logits = x @ params["dense"]["head"].astype(dtype)
+    logits = constrain(logits, "batch", None, "model")
+    logits = _mask_pad_vocab(logits, cfg)
+    out_dtype = jnp.dtype(cfg.logits_dtype)
+    return logits.astype(out_dtype), aux
+
+
+def _mask_pad_vocab(logits, cfg: LMConfig):
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+    return jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def loss_fn(params, cfg: LMConfig, tokens, prefix_emb=None):
+    """Next-token cross-entropy (mean over predicted positions) + MoE aux."""
+    logits, aux = forward(params, cfg, tokens, prefix_emb)
+    # predictions come from positions [P .. P+S-2] for targets tokens[:, 1:]
+    p = 0 if prefix_emb is None else prefix_emb.shape[1]
+    pred = logits[:, p : p + tokens.shape[1] - 1]
+    tgt = tokens[:, 1:]
+    # f32 accumulation regardless of logits storage dtype
+    logz = jax.nn.logsumexp(pred.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold.astype(jnp.float32))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def _position_cache(kind: str, cfg: LMConfig, batch: int, max_len: int):
+    if kind == "attn":
+        return layers.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd,
+                                    cfg.dtype)
+    if kind == "local":
+        return layers.init_kv_cache(batch, min(cfg.window, max_len),
+                                    cfg.n_kv_heads, cfg.hd, cfg.dtype)
+    if kind == "rwkv6":
+        return rwkv.init_rwkv_state(batch, cfg.d_model, cfg.n_heads)
+    if kind == "mamba2":
+        return mamba.init_mamba_state(
+            batch, cfg.d_model, d_state=cfg.ssm_state,
+            head_dim=cfg.mamba_head_dim)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    """Stacked decode state per pattern position (+ shared block KV)."""
+    cache: dict = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        one = _position_cache(kind, cfg, batch, max_len)
+        cache[f"pos_{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_repeats,) + x.shape), one
+        )
+    if cfg.shared_attn:
+        cap = min(cfg.window or max_len, max_len)
+        one = layers.init_kv_cache(batch, cap, cfg.n_kv_heads, cfg.hd, cfg.dtype)
+        cache["shared"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_repeats,) + x.shape), one
+        )
+    return cache
+
+
+def _decode_position(p, kind, cfg, x, state, cur_index):
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else None
+        h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, state = layers.attention_decode(
+            p["attn"], h, state, cur_index, theta=cfg.rope_theta,
+            window=window, n_valid_heads=cfg.n_heads,
+        )
+        x = x + y
+        h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_lib.moe_ffn(p["ffn"], h, cfg.moe, cfg.act)
+        else:
+            y = layers.mlp(p["ffn"], h, cfg.act)
+        return x + y, state
+    if kind == "rwkv6":
+        h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, state = rwkv.rwkv6_decode(p["att"], h, state, n_heads=cfg.n_heads)
+        x = x + y
+        h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, state = rwkv.channel_mix_decode(p["ffn"], h, state)
+        return x + y, state
+    if kind == "mamba2":
+        h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, state = mamba.mamba2_decode(
+            p["mixer"], h, state, d_state=cfg.ssm_state,
+            head_dim=cfg.mamba_head_dim)
+        return x + y, state
+    raise ValueError(kind)
+
+
+def decode_step(
+    params: dict,
+    cfg: LMConfig,
+    token: jnp.ndarray,       # [B] int32 — the latest sampled token
+    cache: dict,
+    cur_index: jnp.ndarray,   # scalar int32 — tokens already in cache
+):
+    """One serving step: next-token logits + updated cache."""
+    dtype = cfg.dtype
+    x = jnp.take(params["embed"]["tokens"], token[:, None], axis=0).astype(dtype)
+    shared = params["dense"].get("shared")
+
+    def superblock(x, xs):
+        block_params, block_cache = xs
+        new_states = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, st = _decode_position(
+                block_params[f"pos_{i}"], kind, cfg, x, block_cache[f"pos_{i}"],
+                cur_index,
+            )
+            new_states[f"pos_{i}"] = st
+        if shared is not None:
+            h = layers.rmsnorm(shared["norm1"], x, cfg.norm_eps)
+            y, st = layers.attention_decode(
+                shared["attn"], h, block_cache["shared"], cur_index,
+                theta=cfg.rope_theta, window=cfg.window,
+                n_valid_heads=cfg.n_heads,
+            )
+            x = x + y
+            h = layers.rmsnorm(shared["norm2"], x, cfg.norm_eps)
+            x = x + layers.mlp(shared["ffn"], h, cfg.act)
+            new_states["shared"] = st
+        return x, new_states
+
+    x, new_cache = jax.lax.scan(
+        superblock, x, (params["dense"]["blocks"], cache),
+        unroll=cfg.n_repeats if cfg.scan_unroll else 1,
+    )
+    x = layers.rmsnorm(params["dense"]["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ params["dense"]["head"].astype(dtype)).astype(jnp.float32)
+    logits = _mask_pad_vocab(logits, cfg)
+    return logits, new_cache
+
+
+def prefill(
+    params: dict,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,                      # [B, S]
+    prefix_emb: Optional[jnp.ndarray] = None,
+):
+    """Score-only prefill: forward the prompt, return last-position logits
+    (the ``prefill_32k`` benchmark shape — forward cost dominates).
+    For the serving handoff use ``prefill_with_cache``."""
+    logits, _ = forward(params, cfg, tokens, prefix_emb)
+    return logits[:, -1]
+
+
+def _prefill_position(p, kind: str, cfg: LMConfig, x, fresh_state):
+    """One layer over the prompt, populating its decode state."""
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else None
+        h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, state = layers.attention_prefill(
+            p["attn"], h, fresh_state, theta=cfg.rope_theta, window=window,
+            n_valid_heads=cfg.n_heads)
+        x = x + y
+        h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_lib.moe_ffn(p["ffn"], h, cfg.moe, cfg.act)
+        else:
+            y = layers.mlp(p["ffn"], h, cfg.act)
+        return x + y, state
+    if kind == "rwkv6":
+        h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, s_fin = rwkv.rwkv6_train(p["att"], h, n_heads=cfg.n_heads,
+                                    return_state=True)
+        x = x + y
+        h2 = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h2_prev = jnp.concatenate(
+            [jnp.zeros_like(h2[:, :1]), h2[:, :-1]], axis=1)
+        x = x + rwkv.channel_mix(p["ffn"], h2, h2_prev)
+        state = rwkv.RWKVState(
+            x_prev=h[:, -1].astype(jnp.float32),
+            s=s_fin,
+            x_prev_ffn=h2[:, -1].astype(jnp.float32),
+        )
+        return x, state
+    if kind == "mamba2":
+        h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, state = mamba.mamba2_train(
+            p["mixer"], h, d_state=cfg.ssm_state,
+            head_dim=cfg.mamba_head_dim, return_state=True)
+        return x + y, state
+    raise ValueError(kind)
+
+
+def prefill_with_cache(
+    params: dict,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,                      # [B, S]
+    max_len: int,
+    prefix_emb: Optional[jnp.ndarray] = None,
+):
+    """Serving prefill: forward the prompt AND populate every layer's decode
+    state (linear/ring KV buffers, recurrent SSM states), so ``decode_step``
+    continues from ``cur_index = S(+prefix)``.
+
+    Returns (last_logits [B, V], cache, cur_index).
+    """
+    dtype = cfg.dtype
+    x = jnp.take(params["embed"]["tokens"], tokens, axis=0).astype(dtype)
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    b, s = x.shape[0], x.shape[1]
+    shared = params["dense"].get("shared")
+    fresh = init_cache(cfg, b, max_len)
+
+    def superblock(x, xs):
+        block_params, block_fresh = xs
+        new_states = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, st = _prefill_position(
+                block_params[f"pos_{i}"], kind, cfg, x, block_fresh[f"pos_{i}"]
+            )
+            new_states[f"pos_{i}"] = st
+        if shared is not None:
+            h = layers.rmsnorm(shared["norm1"], x, cfg.norm_eps)
+            y, st = layers.attention_prefill(
+                shared["attn"], h, block_fresh["shared"],
+                theta=cfg.rope_theta, window=cfg.window,
+                n_valid_heads=cfg.n_heads)
+            x = x + y
+            h = layers.rmsnorm(shared["norm2"], x, cfg.norm_eps)
+            x = x + layers.mlp(shared["ffn"], h, cfg.act)
+            new_states["shared"] = st
+        return x, new_states
+
+    x, cache = jax.lax.scan(
+        superblock, x, (params["dense"]["blocks"], fresh),
+        unroll=cfg.n_repeats if cfg.scan_unroll else 1,
+    )
+    x = layers.rmsnorm(params["dense"]["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, -1] @ params["dense"]["head"].astype(dtype)).astype(jnp.float32)
+    logits = _mask_pad_vocab(logits, cfg)
+    return logits, cache, jnp.asarray(s, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# accounting helpers (roofline)
+# ---------------------------------------------------------------------------
+
+
+def param_counts(cfg: LMConfig) -> dict:
+    """Total and active (MoE top-k) parameter counts, via eval_shape."""
+    import math
+
+    shapes = jax.eval_shape(lambda k: init(k, cfg), jax.random.key(0))
+    total = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe is not None:
+        expert_leaves = []
+        blocks = shapes["dense"]["blocks"]
+        for pos in blocks.values():
+            if "ffn" in pos and "router" in pos["ffn"]:
+                for name in ("w_in", "w_out", "w_gate"):
+                    if name in pos["ffn"]:
+                        expert_leaves.append(pos["ffn"][name])
+        expert_params = sum(math.prod(x.shape) for x in expert_leaves)
+        frac = cfg.moe.top_k / cfg.moe.n_experts
+        active = total - expert_params + int(expert_params * frac)
+    return {"total": total, "active": active}

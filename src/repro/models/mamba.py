@@ -1,0 +1,170 @@
+"""Mamba-2 (SSD) mixer — selective state-space with scalar per-head decay
+(Dao & Gu 2024), as used by zamba2's backbone (arXiv:2411.15242).
+
+Per head h (head dim P, state dim N):
+
+    dt_t  = softplus(dt_raw_t + dt_bias_h)            (selective step size)
+    a_t   = exp(-dt_t * A_h)                          (scalar decay, A_h > 0)
+    S_t   = a_t * S_{t-1} + dt_t * (x_t ⊗ B_t)        (state [P, N])
+    y_t   = S_t C_t + D_h * x_t
+
+x/B/C pass through a short causal depthwise conv (kernel 4). Output is gated
+by silu(z) and RMSNorm'd before the out projection (Mamba-2 block layout).
+
+Training scans over time; decode carries ``MambaState`` — O(1) in sequence
+length (the reason zamba2 runs ``long_500k``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+CONV_K = 4
+
+
+def init_mamba2(
+    key,
+    d_model: int,
+    *,
+    d_state: int = 64,
+    head_dim: int = 64,
+    expand: int = 2,
+) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(d_model)
+    conv_dim = d_inner + 2 * d_state
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": (jax.random.normal(ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads)) * s).astype(jnp.float32),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim)) * 0.5).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)
+        ),
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),  # softplus(-2)~0.13
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (d_inner, d_model)) * (1.0 / jnp.sqrt(d_inner))).astype(jnp.float32),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # [B, CONV_K-1, conv_dim] trailing conv inputs
+    s: jnp.ndarray      # [B, H, P, N] ssm state (f32)
+
+
+def init_mamba_state(batch: int, d_model: int, *, d_state: int = 64,
+                     head_dim: int = 64, expand: int = 2) -> MambaState:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return MambaState(
+        conv=jnp.zeros((batch, CONV_K - 1, conv_dim), jnp.float32),
+        s=jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+    )
+
+
+def _split_proj(proj, d_inner, d_state, n_heads):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : d_inner + d_inner + 2 * d_state]
+    dt = proj[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _ssm_step(x, b, c, dt, a_log, d_skip, s):
+    """One SSD step. x:[B,H,P] b,c:[B,N] dt:[B,H] s:[B,H,P,N] (all f32)."""
+    a = jnp.exp(-dt * jnp.exp(a_log)[None, :])                     # [B,H]
+    dbx = dt[..., None, None] * (x[..., :, None] * b[:, None, None, :])
+    s_new = a[..., None, None] * s + dbx                           # [B,H,P,N]
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c) + d_skip[None, :, None] * x
+    return y, s_new
+
+
+def _gated_out(params, y, z, d_inner, dtype, eps=1e-5):
+    y = y.reshape(*z.shape[:-1], d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + eps)
+    y = y * params["norm_scale"]
+    return y.astype(dtype) @ params["w_out"].astype(dtype)
+
+
+def mamba2_train(params, x, *, d_state: int = 64, head_dim: int = 64,
+                 expand: int = 2, return_state: bool = False):
+    """x: [B, S, D] -> [B, S, D] (or (out, MambaState) with ``return_state``
+    — the prefill -> decode handoff). Causal conv + time scan."""
+    bsz, seq, d_model = x.shape
+    dtype = x.dtype
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+
+    proj = x @ params["w_in"].astype(dtype)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, d_state, n_heads)
+
+    # causal depthwise conv over time (kernel CONV_K)
+    xbc_f = xbc.astype(jnp.float32)
+    pad = jnp.zeros((bsz, CONV_K - 1, xbc.shape[-1]), jnp.float32)
+    xp = jnp.concatenate([pad, xbc_f], axis=1)
+    conv = sum(
+        xp[:, k : k + seq] * params["conv_w"][k][None, None, :]
+        for k in range(CONV_K)
+    ) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+
+    xs = conv[..., :d_inner].reshape(bsz, seq, n_heads, head_dim)
+    bmat = conv[..., d_inner : d_inner + d_state]
+    cmat = conv[..., d_inner + d_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    s0 = jnp.zeros((bsz, n_heads, head_dim, d_state), jnp.float32)
+
+    def body(s, inp):
+        xt, bt, ct, dtt = inp
+        y, s = _ssm_step(xt, bt, ct, dtt, params["A_log"], params["D"], s)
+        return s, y
+
+    xs_t = (
+        jnp.swapaxes(xs, 0, 1),
+        jnp.swapaxes(bmat, 0, 1),
+        jnp.swapaxes(cmat, 0, 1),
+        jnp.swapaxes(dt, 0, 1),
+    )
+    s_fin, ys = jax.lax.scan(body, s0, xs_t)             # [S, B, H, P]
+    y = jnp.swapaxes(ys, 0, 1).reshape(bsz, seq, d_inner)
+    out = _gated_out(params, y, z, d_inner, dtype)
+    if return_state:
+        # decode resumes with the pre-silu conv inputs of the last K-1 steps
+        conv_tail = xp[:, seq : seq + CONV_K - 1]
+        return out, MambaState(conv=conv_tail, s=s_fin)
+    return out
+
+
+def mamba2_decode(params, x, state: MambaState, *, d_state: int = 64,
+                  head_dim: int = 64, expand: int = 2):
+    """One token. x: [B, 1, D] -> ([B, 1, D], new_state)."""
+    bsz, one, d_model = x.shape
+    dtype = x.dtype
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+
+    proj = x[:, 0] @ params["w_in"].astype(dtype)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, d_state, n_heads)
+
+    xbc_f = xbc.astype(jnp.float32)
+    window = jnp.concatenate([state.conv, xbc_f[:, None]], axis=1)  # [B,K,C]
+    conv = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+
+    xt = conv[:, :d_inner].reshape(bsz, n_heads, head_dim)
+    bt = conv[:, d_inner : d_inner + d_state]
+    ct = conv[:, d_inner + d_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    y, s_new = _ssm_step(xt, bt, ct, dt, params["A_log"], params["D"], state.s)
+    out = _gated_out(params, y.reshape(bsz, d_inner), z, d_inner, dtype)
+    return out[:, None], MambaState(conv=window[:, 1:], s=s_new)

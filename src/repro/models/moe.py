@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN: token-choice top-k router, sort-based dispatch,
+expert-parallel over the "model" mesh axis.
+
+Dispatch design (TPU-native, and the first beyond-paper perf fix recorded in
+EXPERIMENTS.md §Perf): the classic GShard one-hot dispatch einsum materializes
+a [tokens, E, capacity] tensor whose FLOPs/bytes scale *quadratically* with
+tokens-per-group — the initial dry-run measured 7.2e15 HLO FLOPs for
+granite-moe's 40-expert top-8 at train_4k. The sort-based formulation is
+linear: argsort tokens by expert id, compute each token's rank within its
+expert (capacity check), scatter into per-group [E, C, D] buffers, run the
+experts as one batched matmul, gather back. Groups = sequences, so all
+position bookkeeping is group-local (no global cumsum across the data axis);
+under pjit the [G, E, C, D] buffers transpose from group-major (data-sharded)
+to expert-major (model-sharded) — XLA lowers exactly the all-to-all pair
+expert parallelism requires.
+
+FLOP cost scales with *active* (top-k x capacity) tokens, so MODEL_FLOPS for
+MoE archs uses N_active (see benchmarks/roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.act import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+
+def init_moe(key, d_model: int, d_ff: int, cfg: MoEConfig, act: str = "swiglu") -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    e = cfg.n_experts
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_out = 1.0 / jnp.sqrt(d_ff)
+    p = {
+        "router": (jax.random.normal(kr, (d_model, e)) * s_in).astype(jnp.float32),
+        "w_in": (jax.random.normal(k1, (e, d_model, d_ff)) * s_in).astype(jnp.float32),
+        "w_out": (jax.random.normal(k2, (e, d_ff, d_model)) * s_out).astype(jnp.float32),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (e, d_model, d_ff)) * s_in).astype(jnp.float32)
+    return p
+
+
+def capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, cfg: MoEConfig, act: str = "swiglu"):
+    """x: [B, S, D] -> ([B, S, D], aux_loss). Groups = batch rows.
+
+    Token-choice top-k with per-group expert capacity; overflow tokens are
+    dropped (Switch/GShard behaviour — the residual carries them).
+    """
+    g, tg, d = x.shape
+    dtype = x.dtype
+    e, k = cfg.n_experts, cfg.top_k
+    cap = capacity(tg, cfg)
+    tk = tg * k
+
+    logits = (x @ params["router"].astype(dtype)).astype(jnp.float32)  # [G,T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                             # [G,T,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort-based position-in-expert (group-local, O(T log T)) --------
+    # Everything here is a sort or a gather — deliberately NO scatter: a
+    # set-scatter under SPMD lowers to a last-writer-wins combiner that
+    # all-reduces u32 buffers of update shape (measured 2.06 TB/device/step
+    # on llama4-scout before this formulation; EXPERIMENTS.md §Perf).
+    flat_e = top_e.reshape(g, tk)                                      # [G,Tk]
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    counts = jax.vmap(lambda fe: jnp.bincount(fe, length=e))(flat_e)   # [G,E]
+    starts = jnp.cumsum(counts, axis=1) - counts                       # exclusive
+    rank_sorted = (
+        jnp.arange(tk)[None, :]
+        - jnp.take_along_axis(starts, sorted_e, axis=1)
+    ).astype(jnp.int32)
+    inv_order = jnp.argsort(order, axis=1)                             # unsort
+    pos = jnp.take_along_axis(rank_sorted, inv_order, axis=1)          # [G,Tk]
+
+    keep = pos < cap
+    safe_pos = jnp.where(keep, pos, cap)                               # overflow slot
+
+    # --- dispatch as a GATHER: slot (e, c) pulls token order[starts+c] ---
+    slot_src = starts[:, :, None] + jnp.arange(cap)[None, None, :]     # [G,E,C]
+    slot_valid = jnp.arange(cap)[None, None, :] < jnp.minimum(
+        counts, cap)[:, :, None]
+    slot_src = jnp.clip(slot_src, 0, tk - 1).reshape(g, e * cap)
+    src_token = jnp.take_along_axis(order, slot_src, axis=1)           # [G,E*C]
+    xrep = jnp.broadcast_to(x[:, :, None, :], (g, tg, k, d)).reshape(g, tk, d)
+    xe = jnp.take_along_axis(xrep, src_token[:, :, None], axis=1)
+    xe = xe.reshape(g, e, cap, d) * slot_valid[..., None].astype(dtype)
+    # two-stage reshard: (1) pin the gather local to each data shard
+    # (E replicated), then (2) slice E onto the model axis. Stating both
+    # stops the partitioner from replicating the full token array instead
+    # (measured 21.5 GB f32 per layer per device before; §Perf).
+    xe = constrain(xe, "batch", None, None, None)
+    xe = constrain(xe, "batch", "model", None, None)
+
+    # --- batched expert FFN (expert-parallel over "model") ---------------
+    h = jnp.einsum("gecd,edf->gecf", xe, params["w_in"].astype(dtype))
+    if act == "swiglu":
+        gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(dtype))
+        h = jax.nn.silu(gate) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_out"].astype(dtype))
+    ye = constrain(ye, "batch", "model", None, None)
+    ye = constrain(ye, "batch", None, None, None)   # all-gather E (the comm)
+
+    # --- gather back + combine (local per data shard) --------------------
+    ye_pad = jnp.concatenate([ye, jnp.zeros((g, e, 1, d), ye.dtype)], axis=2)
+    got = ye_pad[jnp.arange(g)[:, None], flat_e, safe_pos]             # [G,Tk,D]
+    weight = (top_p.reshape(g, tk) * keep.astype(jnp.float32)).astype(dtype)
+    y = (got * weight[:, :, None]).reshape(g, tg, k, d).sum(axis=2)
+
+    # --- Switch-style load-balance aux loss ------------------------------
+    frac_tokens = (
+        jax.vmap(lambda te: jnp.bincount(te, length=e))(top_e[..., 0])
+        .astype(jnp.float32)
+        .mean(axis=0)
+        / tg
+    )
+    frac_probs = probs.mean(axis=(0, 1))
+    aux = cfg.aux_loss_weight * e * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

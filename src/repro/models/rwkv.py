@@ -1,0 +1,264 @@
+"""RWKV-6 "Finch" mixer: linear attention with data-dependent per-channel
+decay (arXiv:2404.05892), plus the RWKV channel-mix FFN.
+
+Recurrence per head (key dim N == value dim N):
+
+    S_t = diag(w_t) . S_{t-1} + k_t v_t^T          (state  [N, N])
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)      (output [N])
+
+with w_t = exp(-exp(wlog_t)) data-dependent via a low-rank projection
+(the v6 novelty vs v5's static decay), u a learned per-channel bonus, and
+token-shift interpolation feeding r/k/v/w/g.
+
+Training runs a time scan (carry = state); decode carries
+``RWKVState`` between steps — O(1) memory in sequence length, which is why
+rwkv6-7b runs the ``long_500k`` shape that full-attention archs skip.
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+single ddlerp mix per stream (no 5-way fused lora-mix), GroupNorm folded to
+per-head RMSNorm.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rwkv6(key, d_model: int, n_heads: int, decay_rank: int = 64) -> dict:
+    n = d_model // n_heads
+    ks = jax.random.split(key, 10)
+    s = 1.0 / jnp.sqrt(d_model)
+    return {
+        "mix_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d_model,), 0.5, jnp.float32),
+        "wr": (jax.random.normal(ks[0], (d_model, d_model)) * s).astype(jnp.float32),
+        "wk": (jax.random.normal(ks[1], (d_model, d_model)) * s).astype(jnp.float32),
+        "wv": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[3], (d_model, d_model)) * s).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[4], (d_model, d_model)) * s).astype(jnp.float32),
+        # data-dependent decay: wlog_t = w0 + (tanh(x A) B)
+        "w0": jnp.full((d_model,), -0.6, jnp.float32),  # exp(-exp(-0.6)) ~ 0.58
+        "wA": (jax.random.normal(ks[5], (d_model, decay_rank)) * s).astype(jnp.float32),
+        "wB": (jax.random.normal(ks[6], (decay_rank, d_model)) * 0.01).astype(jnp.float32),
+        "u": (jax.random.normal(ks[7], (d_model,)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((n_heads, n), jnp.float32),
+    }
+
+
+class RWKVState(NamedTuple):
+    x_prev: jnp.ndarray      # [B, D] previous token into time-mix (token shift)
+    s: jnp.ndarray           # [B, H, N, N] wkv state (f32)
+    x_prev_ffn: jnp.ndarray  # [B, D] previous token into channel-mix
+
+
+def init_rwkv_state(batch: int, d_model: int, n_heads: int) -> RWKVState:
+    n = d_model // n_heads
+    return RWKVState(
+        x_prev=jnp.zeros((batch, d_model), jnp.float32),
+        s=jnp.zeros((batch, n_heads, n, n), jnp.float32),
+        x_prev_ffn=jnp.zeros((batch, d_model), jnp.float32),
+    )
+
+
+def _streams(params, x, x_prev, dtype):
+    """Token-shift lerp + projections. x: [B, D], x_prev: [B, D]."""
+    def lerp(mix):
+        return x + (x_prev - x) * mix.astype(dtype)
+
+    r = lerp(params["mix_r"]) @ params["wr"].astype(dtype)
+    k = lerp(params["mix_k"]) @ params["wk"].astype(dtype)
+    v = lerp(params["mix_v"]) @ params["wv"].astype(dtype)
+    g = lerp(params["mix_g"]) @ params["wg"].astype(dtype)
+    wlog = params["w0"] + jnp.tanh(
+        lerp(params["mix_w"]) @ params["wA"].astype(dtype)
+    ) @ params["wB"].astype(dtype)
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32)))          # decay in (0,1)
+    return r, k, v, g, w
+
+
+def _wkv_step(params, n_heads, r, k, v, w, s):
+    """One recurrence step. r/k/v/w: [B, D]; s: [B, H, N, N] f32."""
+    b, d = r.shape
+    n = d // n_heads
+    rh = r.reshape(b, n_heads, n).astype(jnp.float32)
+    kh = k.reshape(b, n_heads, n).astype(jnp.float32)
+    vh = v.reshape(b, n_heads, n).astype(jnp.float32)
+    wh = w.reshape(b, n_heads, n)
+    u = params["u"].reshape(n_heads, n)
+
+    kv = kh[..., :, None] * vh[..., None, :]                  # [B,H,N,N]
+    y = jnp.einsum("bhn,bhnm->bhm", rh, s + u[None, :, :, None] * kv)
+    s_new = wh[..., :, None] * s + kv
+    return y, s_new
+
+
+def _head_norm(params, y, eps=1e-5):
+    """Per-head RMSNorm of the wkv output. y: [B, H, N] f32."""
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + eps)
+    return y * params["ln_scale"][None]
+
+
+def _wkv_chunked(params, n_heads, r, k, v, w, *, chunk: int = 16):
+    """Chunked WKV over the full sequence — the pure-jnp twin of
+    kernels/wkv6 (same factorization, same CLAMP), scanning over CHUNKS
+    instead of tokens: S/chunk iterations of MXU matmuls instead of S
+    rank-1 updates. r/k/v/w: [B, S, D] -> y [B, S, H, N] (f32)."""
+    b, seq, d = r.shape
+    n = d // n_heads
+    if seq % chunk:
+        return None  # caller falls back to the token scan
+    nc = seq // chunk
+    clamp = 25.0
+
+    def heads(t):
+        return (t.reshape(b, nc, chunk, n_heads, n)
+                .transpose(1, 0, 3, 2, 4)           # [nc, B, H, L, N]
+                .reshape(nc, b * n_heads, chunk, n))
+
+    rh, kh, vh = heads(r.astype(jnp.float32)), heads(k.astype(jnp.float32)), \
+        heads(v.astype(jnp.float32))
+    wh = heads(w.astype(jnp.float32))
+    u = jnp.broadcast_to(
+        params["u"].reshape(n_heads, n), (b, n_heads, n)
+    ).reshape(b * n_heads, 1, n)
+
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = (t_idx > j_idx)[None]
+
+    def body(state, inp):
+        rc, kc, vc, wc = inp                         # [BH, L, N]
+        logw = jnp.log(jnp.maximum(wc, 1e-38))
+        cum = jnp.cumsum(logw, axis=1)
+        cum_prev = cum - logw
+        cref = 0.5 * cum[:, -1:]
+        r_hat = rc * jnp.exp(jnp.clip(cum_prev - cref, -clamp, clamp))
+        k_hat = kc * jnp.exp(jnp.clip(cref - cum, -clamp, clamp))
+        a = jnp.einsum("btn,bjn->btj", r_hat, k_hat)
+        a = jnp.where(causal, a, 0.0)
+        bonus = jnp.sum(rc * u * kc, axis=-1)        # [BH, L]
+        y = (a @ vc
+             + jnp.einsum("btn,bnm->btm", rc * jnp.exp(cum_prev), state)
+             + bonus[..., None] * vc)
+        k_tail = kc * jnp.exp(cum[:, -1:] - cum)
+        state = (jnp.exp(cum[:, -1])[:, :, None] * state
+                 + jnp.einsum("bjn,bjm->bnm", k_tail, vc))
+        return state, y
+
+    s0 = jnp.zeros((b * n_heads, n, n), jnp.float32)
+    _, ys = jax.lax.scan(body, s0, (rh, kh, vh, wh))  # [nc, BH, L, N]
+    return (ys.reshape(nc, b, n_heads, chunk, n)
+            .transpose(1, 0, 3, 2, 4)                 # [B, nc, L, H, N]
+            .reshape(b, seq, n_heads, n))
+
+
+def rwkv6_train(params, x, *, n_heads: int, backend: str = "scan",
+                return_state: bool = False):
+    """Sequence forward. x: [B, S, D] -> [B, S, D] (or (out, s_final) with
+    ``return_state`` — the prefill -> decode handoff).
+
+    backend: "scan" (token-recurrent, exact) or "chunked" (S/16 iterations
+    of matmuls — the jnp twin of kernels/wkv6; EXPERIMENTS §Perf)."""
+    if return_state:
+        backend = "scan"          # state handoff uses the exact recurrence
+    b, seq, d = x.shape
+    dtype = x.dtype
+    x_shift = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1
+    )
+    r, k, v, g, w = _streams(
+        params,
+        x.reshape(b * seq, d),
+        x_shift.reshape(b * seq, d),
+        dtype,
+    )
+    shp = (b, seq, -1)
+    r, k, v, g, w = (t.reshape(shp) for t in (r, k, v, g, w))
+
+    y4 = None
+    s_fin = None
+    if backend == "chunked":
+        y4 = _wkv_chunked(params, n_heads, r, k, v, w)
+    if y4 is None:
+        from ..sharding.act import constrain
+
+        n = d // n_heads
+        s0 = jnp.zeros((b, n_heads, n, n), jnp.float32)
+        s0 = constrain(s0, "batch", "model", None, None)
+
+        def heads4(t):
+            # pin head sharding on the scan inputs so the partitioner keeps
+            # the recurrence head-parallel instead of re-gathering streams
+            t = constrain(t.reshape(b, seq, n_heads, n),
+                          "batch", None, "model", None)
+            return jnp.swapaxes(t.reshape(b, seq, d), 0, 1)
+
+        def body(s, inp):
+            rt, kt, vt, wt = inp
+            y, s = _wkv_step(params, n_heads, rt, kt, vt, wt, s)
+            return s, y
+
+        xs = (heads4(r), heads4(k), heads4(v), heads4(w))
+        s_fin, ys = jax.lax.scan(body, s0, xs)                # [S, B, H, N]
+        y4 = jnp.swapaxes(ys, 0, 1)                           # [B, S, H, N]
+    y = _head_norm(params, y4)
+    y = y.reshape(b, seq, d).astype(dtype)
+    out = (y * jax.nn.silu(g)) @ params["wo"].astype(dtype)
+    if return_state:
+        return out, s_fin
+    return out
+
+
+def rwkv6_decode(params, x, state: RWKVState, *, n_heads: int):
+    """One token. x: [B, 1, D] -> ([B, 1, D], new_state)."""
+    b, one, d = x.shape
+    dtype = x.dtype
+    xt = x[:, 0]
+    r, k, v, g, w = _streams(params, xt, state.x_prev.astype(dtype), dtype)
+    y, s_new = _wkv_step(params, n_heads, r, k, v, w, state.s)
+    y = _head_norm(params, y).reshape(b, d).astype(dtype)
+    out = (y * jax.nn.silu(g)) @ params["wo"].astype(dtype)
+    new_state = state._replace(x_prev=xt.astype(jnp.float32), s=s_new)
+    return out[:, None], new_state
+
+
+def channel_mix_decode(params, h, state: RWKVState):
+    """One-token channel mix; h: [B, 1, D]. Returns ([B,1,D], new_state)."""
+    h_prev = state.x_prev_ffn.astype(h.dtype)[:, None]
+    out = channel_mix(params, h, h_prev)
+    return out, state._replace(x_prev_ffn=h[:, 0].astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# channel mix (RWKV FFN)
+# --------------------------------------------------------------------------
+
+
+def init_channel_mix(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / jnp.sqrt(d_model)
+    return {
+        "mix_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "wk": (jax.random.normal(k1, (d_model, d_ff)) * s).astype(jnp.float32),
+        "wv": (jax.random.normal(k2, (d_ff, d_model)) * (1.0 / jnp.sqrt(d_ff))).astype(jnp.float32),
+        "wr": (jax.random.normal(k3, (d_model, d_model)) * s).astype(jnp.float32),
+    }
+
+
+def channel_mix(params, x, x_prev):
+    """x, x_prev: [B, S, D] (x_prev is x shifted right by one token)."""
+    dtype = x.dtype
+
+    def lerp(mix):
+        return x + (x_prev - x) * mix.astype(dtype)
+
+    k = jnp.square(jax.nn.relu(lerp(params["mix_k"]) @ params["wk"].astype(dtype)))
+    r = jax.nn.sigmoid(lerp(params["mix_r"]) @ params["wr"].astype(dtype))
+    return r * (k @ params["wv"].astype(dtype))

@@ -1,0 +1,9 @@
+"""repro.sharding — PartitionSpec inference rules for params/state/caches."""
+
+from .specs import (
+    batch_spec,
+    cache_spec,
+    infer_cache_shardings,
+    infer_param_shardings,
+    param_spec,
+)

@@ -1,0 +1,58 @@
+"""Activation sharding constraints that degrade to no-ops off-mesh.
+
+Model code calls ``constrain(x, "batch", None, "model")`` with *logical* axis
+names; if a physical mesh is active at trace time (the dry-run / distributed
+trainer), the constraint is applied with the mesh's real axes — "batch"
+resolves to ("pod","data") on multi-pod meshes. On the 1-device CPU test path
+there is no mesh and the call returns ``x`` unchanged, so the same model code
+serves both worlds.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def current_mesh():
+    """The mesh from the innermost ``with mesh:`` context, or None."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def _resolve(axis, mesh):
+    if axis is None:
+        return None
+    if axis == "batch":
+        return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if axis in mesh.axis_names:
+        return axis
+    return None
+
+
+def constrain(x, *logical_axes):
+    """``with_sharding_constraint`` with logical axes; no-op without a mesh
+    or when a sharded dim doesn't divide evenly."""
+    mesh = current_mesh()
+    if mesh is None or len(logical_axes) != x.ndim:
+        return x
+    resolved = []
+    for dim, axis in zip(x.shape, logical_axes):
+        r = _resolve(axis, mesh)
+        if r is not None:
+            size = 1
+            for a in (r if isinstance(r, tuple) else (r,)):
+                size *= mesh.shape[a]
+            if dim % size != 0:
+                r = None
+        resolved.append(r)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )

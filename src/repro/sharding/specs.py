@@ -1,0 +1,227 @@
+"""Sharding rules: param/state pytree -> PartitionSpec tree, by path+shape.
+
+Strategy (DESIGN.md §6):
+
+* Embedding tables shard **row-wise (id-wise)** as aggressively as divisibility
+  allows — ("model","data") then "model" then "data" — because CowClip's
+  per-row threshold makes the whole optimizer update collective-free under
+  row sharding. This is the paper-technique-aligned choice.
+* Dense 2D weights use Megatron TP over "model" + FSDP over "data":
+  ``w_in [D,F] -> P("data","model")``, ``w_out [F,D] -> P("model","data")``.
+* Attention shards heads over "model" (falls back to head_dim, then
+  replicate, for MQA kv=1 etc.); MoE shards experts over "model"
+  (expert-parallel), falling back to FFN-dim TP when E % model != 0.
+* Every rule is a *candidate list*; the first candidate whose sharded dims
+  all divide evenly is used. This one engine covers params, grads and Adam
+  (mu/nu) state — they share tree paths — plus decode caches.
+
+The "pod" axis is folded into batch/FSDP meshes via ``("pod","data")``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fits(shape, spec, mesh: Mesh) -> bool:
+    for dim, axis in zip(shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            return False
+    return True
+
+
+def pick(shape, candidates, mesh: Mesh) -> P:
+    """First candidate PartitionSpec whose sharded dims divide evenly."""
+    for cand in candidates:
+        spec = P(*cand)
+        if len(cand) == len(shape) and _fits(shape, cand, mesh):
+            return spec
+    return P(*([None] * len(shape)))
+
+
+def _data_axes(mesh: Mesh):
+    """Batch/FSDP axis group: ("pod","data") on multi-pod meshes."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter/grad/Adam-moment leaf."""
+    dfsdp = _data_axes(mesh)
+    d = dfsdp if len(dfsdp) > 1 else dfsdp[0]
+
+    # stacked scan-over-layers leaves get a leading replicated repeat dim
+    lead: tuple = ()
+    if "blocks/" in path:
+        lead, shape = (None,), shape[1:]
+
+    def out(cands):
+        return P(*(lead + tuple(pick(shape, cands, mesh))))
+
+    name = path.split("/")[-1]
+
+    # ---- embedding tables (CowClip group): rows = ids, shard rows hard
+    # (matched by leaf name so Adam mu/nu state paths hit the same rule)
+    if (name == "tokens" or re.match(r"field_\d+$", name)) and len(shape) == 2:
+        return out([
+            (("model",) + dfsdp, None),
+            (("model",), None),
+            (d, None),
+            (None, None),
+        ])
+    # ---- LM head
+    if name == "head":
+        return out([(d, "model"), (None, "model"), (d, None), (None, None)])
+    # ---- attention projections
+    # head_dim is the attention contraction dim — never shard it (doing so
+    # turns every score matmul into an all-reduce over [B,H,S,S]).
+    if name in ("wq", "wk", "wv") and len(shape) == 3:
+        return out([
+            (d, "model", None),
+            (None, "model", None),
+            (d, None, None),
+            (None, None, None),
+        ])
+    if name == "wo" and len(shape) == 3:
+        return out([
+            ("model", None, d),
+            (None, "model", d),
+            (None, None, d),
+            (None, None, None),
+        ])
+    # ---- MoE experts [E, D, F] / [E, F, D]; router stays replicated
+    if re.search(r"ffn/(w_in|w_gate)$", path) and len(shape) == 3:
+        return out([
+            ("model", d, None),
+            (None, d, "model"),
+            (None, None, "model"),
+            (None, None, None),
+        ])
+    if re.search(r"ffn/w_out$", path) and len(shape) == 3:
+        return out([
+            ("model", None, d),
+            (None, "model", d),
+            (None, "model", None),
+            (None, None, None),
+        ])
+    if name == "router":
+        return out([(None, None)])
+    # ---- dense 2D mats: in-proj style [D, F] vs out-proj style [F, D]
+    if name in ("w_in", "w_gate", "wk", "wr", "wg") and len(shape) == 2:
+        return out([(d, "model"), (None, "model"), (d, None), (None, None)])
+    if name in ("w_out", "wo", "wv") and len(shape) == 2:
+        return out([("model", d), ("model", None), (None, d), (None, None)])
+    if name == "conv_w" and len(shape) == 2:
+        return out([(None, "model"), (None, None)])
+    if name in ("wA",) and len(shape) == 2:
+        return out([(d, None), (None, None)])
+    if name == "wB" and len(shape) == 2:
+        return out([(None, "model"), (None, None)])
+    if name == "ln_scale" and len(shape) == 2:   # rwkv [H, N]
+        return out([("model", None), (None, None)])
+    # ---- CTR dense tower [in, out] mats
+    if re.match(r"w\d+$", name) and len(shape) == 2:
+        return out([(d, "model"), (None, "model"), (None, None)])
+    # ---- everything else (norm scales, biases, vectors, scalars): replicate
+    return P(*(lead + tuple([None] * len(shape))))
+
+
+def cache_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for decode-cache leaves (stacked [n_repeats, ...])."""
+    dfsdp = _data_axes(mesh)
+    d = dfsdp if len(dfsdp) > 1 else dfsdp[0]
+    lead, shape = (None,), shape[1:]
+
+    def out(cands):
+        return P(*(lead + tuple(pick(shape, cands, mesh))))
+
+    name = path.split("/")[-1]
+    if name in ("k", "v") and len(shape) == 4:         # [B, S, K, hd]
+        # head_dim is the score-matmul contraction dim — never shard it
+        # (it forces involuntary remat in the SPMD partitioner). When kv
+        # heads don't divide the model axis, split-KV over the sequence
+        # (flash-decoding style): scores reduce over S with one small
+        # softmax collective.
+        all_axes = (dfsdp + ("model",)) if len(dfsdp) > 1 else ("data", "model")
+        return out([
+            (d, None, "model", None),
+            (d, "model", None, None),
+            (d, None, None, None),
+            (None, all_axes, None, None),  # B=1 long-context: S over all
+            (None, "model", None, None),
+            (None, d, None, None),
+            (None, None, None, None),
+        ])
+    if name == "s" and len(shape) == 4:                # rwkv/mamba [B, H, ., .]
+        return out([
+            (d, "model", None, None),
+            (None, "model", None, None),
+            (d, None, None, None),
+            (None, None, None, None),
+        ])
+    if name in ("x_prev", "x_prev_ffn") and len(shape) == 2:
+        return out([(d, "model"), (d, None), (None, "model"), (None, None)])
+    if name == "conv" and len(shape) == 3:             # [B, K-1, conv_dim]
+        return out([(d, None, "model"), (d, None, None), (None, None, "model"),
+                    (None, None, None)])
+    return out([tuple([None] * len(shape))])
+
+
+def _paths_tree(tree):
+    """Tree of 'a/b/c' path strings matching ``tree``'s structure."""
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+
+    def pstr(p):
+        parts = []
+        for e in p:
+            if hasattr(e, "key"):
+                parts.append(str(e.key))
+            elif hasattr(e, "idx"):
+                parts.append(str(e.idx))
+            elif hasattr(e, "name"):
+                parts.append(str(e.name))
+            else:
+                parts.append(str(e))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_unflatten(treedef, [pstr(p) for p, _ in paths_leaves])
+
+
+def infer_param_shardings(tree, mesh: Mesh):
+    """NamedSharding tree for params / grads / optimizer states."""
+    paths = _paths_tree(tree)
+    return jax.tree.map(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf.shape, mesh)),
+        paths,
+        tree,
+    )
+
+
+def infer_cache_shardings(tree, mesh: Mesh):
+    paths = _paths_tree(tree)
+    return jax.tree.map(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf.shape, mesh)),
+        paths,
+        tree,
+    )
+
+
+def batch_spec(mesh: Mesh) -> P:
+    dfsdp = _data_axes(mesh)
+    return P(dfsdp if len(dfsdp) > 1 else dfsdp[0])

@@ -1,0 +1,4 @@
+"""repro.train — training loop, metrics, checkpointing."""
+
+from . import checkpoint, metrics
+from .loop import TrainResult, make_eval_fn, make_train_step, train_ctr

@@ -1,0 +1,69 @@
+"""Checkpointing: pytree <-> single .npz file, path-keyed.
+
+Works for params + optimizer state (any nesting of dict/tuple/list/NamedTuple
+with array leaves). Scalars (step counters) round-trip as 0-d arrays.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save(path: str, tree: PyTree) -> None:
+    """Atomic save: write temp file in the same dir, then rename."""
+    flat = _flatten_with_paths(tree)
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str, template: PyTree) -> PyTree:
+    """Restore into the structure (and dtypes) of ``template``."""
+    with np.load(path) as data:
+        flat = dict(data)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths_leaves:
+        key = "/".join(_path_str(e) for e in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint {path} missing leaf {key!r}")
+        arr = flat[key]
+        if arr.shape != np.shape(leaf):
+            raise ValueError(
+                f"leaf {key!r}: checkpoint shape {arr.shape} != template {np.shape(leaf)}"
+            )
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

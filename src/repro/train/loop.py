@@ -1,0 +1,178 @@
+"""CTR training loop: jit'd step, epochs, eval — the paper's experiment
+driver (single host; the distributed variant lives in repro/launch/train.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import GradientTransformation, apply_updates
+from ..data.synthetic import CTRDataset, iterate_batches
+from ..models import ctr
+from . import metrics
+
+
+def make_train_step(cfg: ctr.CTRConfig, tx: GradientTransformation):
+    """Returns jit'd (params, opt_state, batch) -> (params, opt_state, aux).
+
+    The task loss is plain mean BCE; L2 enters through the optimizer
+    (coupled, paper-faithful), and CowClip's counts are computed here from
+    the batch ids with one segment-sum per field.
+    """
+
+    def loss_fn(params, ids, dense, labels):
+        logits = ctr.apply(params, cfg, ids, dense)
+        return metrics.logloss(logits, labels), logits
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, batch):
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch["ids"], batch["dense"], batch["labels"]
+        )
+        counts = ctr.batch_counts(cfg, batch["ids"], params)
+        updates, opt_state = tx.update(grads, opt_state, params, counts=counts)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def make_fused_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
+                          zeta: float = 1e-5, dense_tx=None):
+    """Train step that runs every embedding table through the fused Pallas
+    CowClip+L2+Adam kernel (repro.kernels.cowclip) instead of the composable
+    transform chain — the TPU fast path. Dense tower still goes through the
+    substrate optimizer. State: {"step", "m", "v"} trees for embeddings +
+    the dense transform state.
+
+    Equivalence with the substrate path is asserted in
+    tests/test_train_integration.py.
+    """
+    from ..core import optim as optim_lib
+    from ..kernels.cowclip import fused_cowclip_adam
+
+    if dense_tx is None:
+        dense_tx = optim_lib.adam(hp.dense_lr, l2=hp.dense_l2)
+
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params["embed"])
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, params["embed"]),
+            "dense": dense_tx.init(params["dense"]),
+        }
+
+    def loss_fn(params, ids, dense, labels):
+        logits = ctr.apply(params, cfg, ids, dense)
+        return metrics.logloss(logits, labels)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, batch["ids"], batch["dense"], batch["labels"])
+        counts = ctr.batch_counts(cfg, batch["ids"], params)
+        t = state["step"] + 1
+
+        new_embed, new_m, new_v = {}, {}, {}
+        for group in params["embed"]:
+            new_embed[group], new_m[group], new_v[group] = {}, {}, {}
+            for name, w in params["embed"][group].items():
+                # 1-dim LR tables are CowClip-exempt but share the kernel
+                # (the kernel itself skips clipping when dim < 2).
+                wn, mn, vn = fused_cowclip_adam(
+                    w, grads["embed"][group][name], counts[group][name],
+                    state["m"][group][name], state["v"][group][name], t,
+                    r=r, zeta=zeta, lr=hp.emb_lr, l2=hp.emb_l2,
+                )
+                new_embed[group][name] = wn
+                new_m[group][name] = mn
+                new_v[group][name] = vn
+
+        d_updates, d_state = dense_tx.update(
+            grads["dense"], state["dense"], params["dense"])
+        new_dense = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), params["dense"], d_updates)
+        new_state = {"step": t, "m": new_m, "v": new_v, "dense": d_state}
+        return {"embed": new_embed, "dense": new_dense}, new_state, {
+            "loss": loss}
+
+    return step, init
+
+
+def make_eval_fn(cfg: ctr.CTRConfig):
+    @jax.jit
+    def logits_fn(params, ids, dense):
+        return ctr.apply(params, cfg, ids, dense)
+
+    def evaluate(params, ds: CTRDataset, batch_size: int = 8192) -> dict:
+        all_scores, all_labels = [], []
+        for b in iterate_batches(ds, batch_size, shuffle=False, drop_remainder=False):
+            s = logits_fn(params, jnp.asarray(b["ids"]), jnp.asarray(b["dense"]))
+            all_scores.append(np.asarray(s))
+            all_labels.append(b["labels"])
+        scores = np.concatenate(all_scores)
+        labels = np.concatenate(all_labels)
+        ll = float(
+            np.mean(np.logaddexp(0.0, scores) - labels * scores)
+        )
+        return {"auc": metrics.auc_numpy(scores, labels), "logloss": ll}
+
+    return evaluate
+
+
+@dataclasses.dataclass
+class TrainResult:
+    history: list
+    final_eval: dict
+    seconds: float
+    steps: int
+
+
+def train_ctr(
+    cfg: ctr.CTRConfig,
+    tx: GradientTransformation,
+    train_ds: CTRDataset,
+    test_ds: Optional[CTRDataset],
+    *,
+    batch_size: int,
+    epochs: int = 1,
+    seed: int = 0,
+    eval_every_epoch: bool = True,
+    log_fn: Optional[Callable[[str], None]] = None,
+) -> TrainResult:
+    params = ctr.init(jax.random.key(seed), cfg)
+    opt_state = tx.init(params)
+    step_fn = make_train_step(cfg, tx)
+    eval_fn = make_eval_fn(cfg)
+
+    history = []
+    n_steps = 0
+    t0 = time.perf_counter()
+    for epoch in range(epochs):
+        for b in iterate_batches(train_ds, batch_size, seed=seed + epoch):
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt_state, aux = step_fn(params, opt_state, batch)
+            n_steps += 1
+        if eval_every_epoch and test_ds is not None:
+            ev = eval_fn(params, test_ds)
+            history.append({"epoch": epoch, **ev})
+            if log_fn:
+                log_fn(
+                    f"epoch {epoch}: auc={ev['auc']:.4f} logloss={ev['logloss']:.4f}"
+                )
+    seconds = time.perf_counter() - t0
+    final = (
+        history[-1]
+        if history
+        else (eval_fn(params, test_ds) if test_ds is not None else {})
+    )
+    return TrainResult(history=history, final_eval=dict(final), seconds=seconds,
+                       steps=n_steps)

@@ -1,0 +1,69 @@
+"""Evaluation metrics: AUC (Mann-Whitney rank form) and LogLoss, in JAX."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logloss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean binary cross-entropy from logits (numerically stable)."""
+    # log(1+e^z) - y*z
+    return jnp.mean(jax.nn.softplus(logits) - labels * logits)
+
+
+def auc(scores: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Area under the ROC curve via the rank-sum (Mann-Whitney U) statistic.
+
+    Ties get midranks (average rank), matching sklearn's roc_auc_score.
+    """
+    scores = scores.astype(jnp.float64)
+    n = scores.shape[0]
+    order = jnp.argsort(scores)
+    sorted_scores = scores[order]
+    ranks_sorted = jnp.arange(1, n + 1, dtype=jnp.float64)
+    # midranks for ties: average rank within each equal-score run
+    is_new = jnp.concatenate(
+        [jnp.array([True]), sorted_scores[1:] != sorted_scores[:-1]]
+    )
+    group_id = jnp.cumsum(is_new) - 1
+    group_sum = jax.ops.segment_sum(ranks_sorted, group_id, num_segments=n)
+    group_cnt = jax.ops.segment_sum(
+        jnp.ones_like(ranks_sorted), group_id, num_segments=n
+    )
+    midrank_sorted = (group_sum / jnp.maximum(group_cnt, 1.0))[group_id]
+    ranks = jnp.zeros(n, jnp.float64).at[order].set(midrank_sorted)
+
+    labels = labels.astype(jnp.float64)
+    n_pos = labels.sum()
+    n_neg = n - n_pos
+    rank_pos = (ranks * labels).sum()
+    u = rank_pos - n_pos * (n_pos + 1.0) / 2.0
+    return u / jnp.maximum(n_pos * n_neg, 1.0)
+
+
+def auc_numpy(scores, labels) -> float:
+    """Host-side AUC for large eval sets (float64 numpy, midranks)."""
+    import numpy as np
+
+    scores = np.asarray(scores, np.float64)
+    labels = np.asarray(labels, np.float64)
+    order = np.argsort(scores)
+    s = scores[order]
+    ranks = np.empty_like(s)
+    n = len(s)
+    i = 0
+    base = np.arange(1, n + 1, dtype=np.float64)
+    while i < n:
+        j = i
+        while j + 1 < n and s[j + 1] == s[i]:
+            j += 1
+        ranks[i : j + 1] = base[i : j + 1].mean()
+        i = j + 1
+    r = np.empty(n, np.float64)
+    r[order] = ranks
+    n_pos = labels.sum()
+    n_neg = n - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float(((r * labels).sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))

@@ -1,0 +1,93 @@
+"""Config system sanity: every assigned config validates, matches its
+assignment card, and produces correct input_specs for all four shapes."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (
+    ARCH_MODULES,
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    get_config,
+    input_specs,
+    supports_long_context,
+)
+
+# the assignment card (arch -> (L, d_model, H, kv, d_ff, vocab))
+ASSIGNMENT = {
+    "granite-20b":            (52, 6144, 48, 1, 24576, 49152),
+    "stablelm-3b":            (32, 2560, 32, 32, 6912, 50304),
+    "musicgen-large":         (48, 2048, 32, 32, 8192, 2048),
+    "rwkv6-7b":               (32, 4096, None, None, 14336, 65536),
+    "gemma3-12b":             (48, 3840, 16, 8, 15360, 262144),
+    "deepseek-coder-33b":     (62, 7168, 56, 8, 19200, 32256),
+    "llama4-scout-17b-a16e":  (48, 5120, 40, 8, 8192, 202048),
+    "internvl2-26b":          (48, 6144, 48, 8, 16384, 92553),
+    "granite-moe-3b-a800m":   (32, 1536, 24, 8, 512, 49155),
+    "zamba2-2.7b":            (54, 2560, 32, 32, 10240, 32000),
+}
+
+MOE_SPECS = {
+    "llama4-scout-17b-a16e": (16, 1),
+    "granite-moe-3b-a800m": (40, 8),
+}
+
+
+def test_all_assigned_archs_registered():
+    assert set(ASSIGNMENT) == set(ASSIGNED_ARCHS)
+    assert "deepfm-criteo" in ARCH_MODULES
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = ASSIGNMENT[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.d_ff == ff and cfg.vocab_size == v
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if arch in MOE_SPECS:
+        e, k = MOE_SPECS[arch]
+        assert cfg.moe.n_experts == e and cfg.moe.top_k == k
+    assert cfg.source, "every config cites its source"
+    cfg.validate()
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "rwkv6-7b", "internvl2-26b"])
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    if shape == "long_500k" and not supports_long_context(cfg):
+        pytest.skip("designed skip")
+    spec = INPUT_SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    if spec["step"] in ("train", "prefill"):
+        assert specs["tokens"].shape == (spec["global_batch"],
+                                         spec["seq_len"])
+        assert specs["tokens"].dtype == jnp.int32
+        if cfg.frontend:
+            assert specs["prefix_emb"].shape == (
+                spec["global_batch"], cfg.n_prefix, cfg.d_model)
+    else:
+        assert specs["token"].shape == (spec["global_batch"],)
+        assert specs["cur_index"].shape == ()
+        # cache leaves are ShapeDtypeStructs only — no allocation
+        for leaf in jax.tree.leaves(specs["cache"]):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_padded_heads_divisible_on_production_mesh():
+    for arch in ("deepseek-coder-33b", "llama4-scout-17b-a16e",
+                 "granite-moe-3b-a800m"):
+        cfg = get_config(arch)
+        assert cfg.n_heads_alloc % 16 == 0, arch
+        assert cfg.n_heads_alloc % cfg.n_kv_heads == 0, arch
+        assert cfg.n_heads_alloc >= cfg.n_heads
+
+
+def test_padded_vocab_divisible():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert 0 <= cfg.padded_vocab - cfg.vocab_size < 256

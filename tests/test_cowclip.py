@@ -1,0 +1,138 @@
+"""CowClip invariants: unit tests + hypothesis property tests (Alg. 1)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cowclip_table, make_clip_transform
+from repro.core.cowclip import (
+    clip_table_columnwise_const,
+    clip_table_fieldwise_adaptive,
+    clip_table_global,
+)
+
+
+def _row_norms(x):
+    return np.linalg.norm(np.asarray(x, np.float64), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_absent_id_loss_grad_untouched():
+    """cnt=0 rows clip to zero — consistent with a zero loss gradient."""
+    w = jnp.ones((4, 8))
+    g = jnp.ones((4, 8))
+    cnt = jnp.array([0.0, 1.0, 0.0, 2.0])
+    out = cowclip_table(g, w, cnt)
+    assert float(jnp.abs(out[0]).max()) == 0.0
+    assert float(jnp.abs(out[2]).max()) == 0.0
+
+
+def test_small_grad_not_clipped():
+    w = jnp.full((2, 4), 10.0)            # wnorm = 20, clip_t = cnt*20
+    g = jnp.full((2, 4), 0.1)             # gnorm = 0.2 << clip_t
+    cnt = jnp.array([1.0, 3.0])
+    out = cowclip_table(g, w, cnt)
+    np.testing.assert_allclose(out, g, rtol=1e-6)
+
+
+def test_large_grad_clipped_to_threshold():
+    w = jnp.full((1, 4), 0.5)             # wnorm = 1.0
+    g = jnp.full((1, 4), 100.0)           # gnorm = 200
+    cnt = jnp.array([2.0])
+    out = cowclip_table(g, w, cnt, r=1.0, zeta=1e-5)
+    assert _row_norms(out)[0] == pytest.approx(2.0, rel=1e-5)  # cnt * r * ||w||
+
+
+def test_zeta_lower_bound_active_for_tiny_weights():
+    w = jnp.full((1, 4), 1e-9)            # wnorm ~ 0 -> bound = zeta
+    g = jnp.full((1, 4), 1.0)
+    cnt = jnp.array([1.0])
+    out = cowclip_table(g, w, cnt, r=1.0, zeta=1e-3)
+    assert _row_norms(out)[0] == pytest.approx(1e-3, rel=1e-4)
+
+
+def test_lr_tables_exempt():
+    """Paper: CowClip not applied to the 1-dim LR-stream embeddings."""
+    w = jnp.full((3, 1), 1e-9)
+    g = jnp.full((3, 1), 100.0)
+    out = cowclip_table(g, w, jnp.zeros(3))
+    np.testing.assert_array_equal(out, g)
+
+
+def test_clip_variants_shapes():
+    w = jnp.ones((8, 4))
+    g = 100.0 * jnp.ones((8, 4))
+    for fn in (lambda: clip_table_global(g, 1.0),
+               lambda: clip_table_columnwise_const(g, 1.0),
+               lambda: clip_table_fieldwise_adaptive(g, w, jnp.ones(8))):
+        out = fn()
+        assert out.shape == g.shape
+        assert float(jnp.linalg.norm(out)) <= float(jnp.linalg.norm(g))
+
+
+def test_make_clip_transform_dispatch():
+    params = {"t": jnp.ones((4, 4))}
+    grads = {"t": jnp.ones((4, 4))}
+    counts = {"t": jnp.ones(4)}
+    for kind in ("none", "global", "field", "column", "adaptive_field",
+                 "adaptive_column"):
+        tx = make_clip_transform(kind, clip_t=0.5)
+        state = tx.init(params)
+        out, _ = tx.update(grads, state, params, counts=counts)
+        assert out["t"].shape == (4, 4)
+    with pytest.raises(ValueError):
+        make_clip_transform("nope").update(grads, (), params, counts=counts)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+_tables = hnp.arrays(
+    np.float32, (16, 8),
+    elements=st.floats(-10.0, 10.0, width=32, allow_nan=False),
+)
+_counts = hnp.arrays(
+    np.float32, (16,), elements=st.sampled_from([0.0, 1.0, 2.0, 5.0, 100.0])
+)
+
+
+@hypothesis.given(w=_tables, g=_tables, cnt=_counts)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_property_clipped_norm_bounded(w, g, cnt):
+    """Post-clip row norm <= cnt * max(r*||w||, zeta) (+ float slack)."""
+    out = np.asarray(cowclip_table(jnp.asarray(g), jnp.asarray(w), jnp.asarray(cnt)))
+    bound = cnt * np.maximum(1.0 * _row_norms(w), 1e-5)
+    assert np.all(_row_norms(out) <= bound * (1 + 1e-4) + 1e-7)
+
+
+@hypothesis.given(w=_tables, g=_tables, cnt=_counts)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_property_direction_preserved(w, g, cnt):
+    """Clipping only rescales rows: out = alpha * g with alpha in [0, 1]."""
+    out = np.asarray(cowclip_table(jnp.asarray(g), jnp.asarray(w), jnp.asarray(cnt)))
+    gn = _row_norms(g)
+    for i in range(g.shape[0]):
+        if gn[i] < 1e-6:
+            continue
+        alpha = out[i] @ g[i] / (gn[i] ** 2)
+        assert -1e-5 <= alpha <= 1 + 1e-5
+        np.testing.assert_allclose(out[i], alpha * g[i], atol=1e-4)
+
+
+@hypothesis.given(w=_tables, g=_tables, cnt=_counts)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_property_idempotent(w, g, cnt):
+    """Clipping an already-clipped gradient is a no-op."""
+    once = cowclip_table(jnp.asarray(g), jnp.asarray(w), jnp.asarray(cnt))
+    twice = cowclip_table(once, jnp.asarray(w), jnp.asarray(cnt))
+    np.testing.assert_allclose(np.asarray(twice), np.asarray(once), rtol=1e-5,
+                               atol=1e-6)

@@ -1,0 +1,97 @@
+"""Data pipeline: Zipf frequency shape, determinism, batching, criteo format."""
+
+import numpy as np
+import pytest
+
+from repro.data import (
+    iterate_batches,
+    load_criteo_tsv,
+    make_ctr_dataset,
+    make_lm_tokens,
+)
+
+VOCABS = (100, 1000, 37)
+
+
+def test_deterministic_in_seed():
+    a = make_ctr_dataset(2000, VOCABS, seed=42)
+    b = make_ctr_dataset(2000, VOCABS, seed=42)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    c = make_ctr_dataset(2000, VOCABS, seed=43)
+    assert not np.array_equal(a.ids, c.ids)
+
+
+def test_zipf_frequency_imbalance():
+    """The paper's driving property: exponential id-frequency imbalance —
+    the most frequent id appears orders of magnitude more than the median."""
+    ds = make_ctr_dataset(50_000, (10_000,), zipf_a=1.2, seed=0)
+    counts = np.bincount(ds.ids[:, 0], minlength=10_000)
+    top = np.sort(counts)[::-1]
+    assert top[0] > 50 * max(np.median(counts), 1)
+    # many ids are infrequent (p << 1/batch for reasonable batch sizes)
+    assert (counts <= 2).sum() > 1000
+
+
+def test_positive_rate_calibration():
+    ds = make_ctr_dataset(20_000, VOCABS, target_pos_rate=0.25, seed=1)
+    assert 0.18 < ds.labels.mean() < 0.32
+
+
+def test_labels_learnable_signal():
+    """Ids must carry signal: per-id empirical CTR should vary widely."""
+    ds = make_ctr_dataset(50_000, (50,), zipf_a=1.05, seed=3)
+    rates = []
+    for i in range(50):
+        mask = ds.ids[:, 0] == i
+        if mask.sum() > 100:
+            rates.append(ds.labels[mask].mean())
+    assert max(rates) - min(rates) > 0.2
+
+
+def test_split_and_batching():
+    ds = make_ctr_dataset(1000, VOCABS, seed=0)
+    tr, te = ds.split(0.9)
+    assert len(tr) == 900 and len(te) == 100
+    batches = list(iterate_batches(tr, 128, seed=0))
+    assert len(batches) == 7          # drop remainder
+    assert batches[0]["ids"].shape == (128, 3)
+    all_b = list(iterate_batches(tr, 128, shuffle=False, drop_remainder=False))
+    assert sum(b["ids"].shape[0] for b in all_b) == 900
+
+
+def test_lm_tokens_zipfian():
+    toks = make_lm_tokens(100_000, 5000, seed=0)
+    counts = np.bincount(toks, minlength=5000)
+    assert counts.max() > 30 * max(np.median(counts), 1)
+    assert toks.dtype == np.int32 and toks.min() >= 0 and toks.max() < 5000
+
+
+def test_criteo_loader_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    rows = []
+    for _ in range(50):
+        label = rng.integers(0, 2)
+        ints = [str(rng.integers(0, 100)) if rng.random() > 0.2 else ""
+                for _ in range(13)]
+        cats = [f"{rng.integers(0, 16**8):08x}" if rng.random() > 0.1 else ""
+                for _ in range(26)]
+        rows.append("\t".join([str(label)] + ints + cats))
+    p = tmp_path / "criteo.tsv"
+    p.write_text("\n".join(rows) + "\n")
+
+    ds = load_criteo_tsv(str(p), vocab_per_field=1000)
+    assert ds.ids.shape == (50, 26)
+    assert ds.dense.shape == (50, 13)
+    assert (ds.ids >= 0).all() and (ds.ids < 1000).all()
+    assert (ds.dense >= 0).all()          # log1p of clipped ints
+    # stable hashing
+    ds2 = load_criteo_tsv(str(p), vocab_per_field=1000)
+    np.testing.assert_array_equal(ds.ids, ds2.ids)
+
+
+def test_criteo_loader_rejects_malformed(tmp_path):
+    p = tmp_path / "bad.tsv"
+    p.write_text("1\t2\t3\n")
+    with pytest.raises(ValueError):
+        load_criteo_tsv(str(p))

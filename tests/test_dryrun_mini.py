@@ -1,0 +1,96 @@
+"""Mini dry-run in a subprocess: 8 simulated devices, 2x4 mesh, reduced
+configs — proves the lower+compile machinery end-to-end without the cost of
+the full 512-device sweep (which runs via `python -m repro.launch.dryrun`)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_config, reduce_config
+from repro.core import apply_updates, build_optimizer, scale_hyperparams
+from repro.models import embedding, lm
+from repro.sharding.specs import infer_cache_shardings, infer_param_shardings
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+arch = {arch!r}
+cfg = dataclasses.replace(
+    reduce_config(get_config(arch)), d_model=256, n_heads=8,
+    n_kv_heads={kv}, vocab_size=512, remat=True)
+cfg.validate()
+
+params = jax.eval_shape(lambda: lm.init(jax.random.key(0), cfg))
+p_shard = infer_param_shardings(params, mesh)
+hp = scale_hyperparams("cowclip", base_lr=1e-4, base_l2=1e-5,
+                       base_batch=64, batch_size=512)
+tx = build_optimizer(hp)
+opt = jax.eval_shape(tx.init, params)
+o_shard = infer_param_shardings(opt, mesh)
+
+B, S = 8, 64
+batch = {{"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}}
+if cfg.frontend:
+    batch["prefix_emb"] = jax.ShapeDtypeStruct((B, cfg.n_prefix, cfg.d_model), cfg.dtype)
+b_shard = jax.tree.map(
+    lambda l: NamedSharding(mesh, P("data", *([None] * (len(l.shape) - 1)))), batch)
+
+def train_step(p, o, b):
+    def loss(pp):
+        return lm.loss_fn(pp, cfg, b["tokens"], b.get("prefix_emb"))[0]
+    l, g = jax.value_and_grad(loss)(p)
+    c = {{"tokens": embedding.token_counts(b["tokens"], cfg.padded_vocab)}}
+    u, o = tx.update(g, o, p, counts=c)
+    return apply_updates(p, u), o, l
+
+fn = jax.jit(train_step, in_shardings=(p_shard, o_shard, b_shard),
+             out_shardings=(p_shard, o_shard, None))
+with mesh:
+    lowered = fn.lower(params, opt, batch)
+compiled = lowered.compile()
+cost = compiled.cost_analysis()
+mem = compiled.memory_analysis()
+
+# decode too
+cache = jax.eval_shape(lambda: lm.init_cache(cfg, B, 128))
+c_shard = infer_cache_shardings(cache, mesh)
+def serve(p, c, t, i):
+    return lm.decode_step(p, cfg, t, c, i)
+fn2 = jax.jit(serve, in_shardings=(p_shard, c_shard,
+                                   NamedSharding(mesh, P("data")), None),
+              out_shardings=(None, c_shard))
+with mesh:
+    low2 = fn2.lower(params, cache, jax.ShapeDtypeStruct((B,), jnp.int32),
+                     jax.ShapeDtypeStruct((), jnp.int32))
+low2.compile()
+print(json.dumps({{"ok": True, "flops": float(cost.get("flops", -1)),
+                   "temp": int(mem.temp_size_in_bytes)}}))
+"""
+
+
+@pytest.mark.parametrize("arch,kv", [
+    ("stablelm-3b", 8),          # dense MHA
+    ("gemma3-12b", 4),           # local/global mix
+    ("granite-moe-3b-a800m", 4), # MoE
+    ("rwkv6-7b", 8),             # attn-free
+    ("zamba2-2.7b", 8),          # hybrid + shared block
+])
+def test_mini_dryrun_train_and_decode(arch, kv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    code = SCRIPT.format(arch=arch, kv=kv)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["flops"] > 0

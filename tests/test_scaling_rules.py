@@ -1,0 +1,64 @@
+"""Scaling-rule math vs the paper's Tables 8-9 hyperparameter schedules."""
+
+import math
+
+import pytest
+
+from repro.core import RULES, scale_hyperparams
+
+
+BASE = dict(base_lr=1e-4, base_l2=1e-4, base_batch=1024)
+
+
+def test_no_scale_identity():
+    hp = scale_hyperparams("no_scale", batch_size=8192, **BASE)
+    assert hp.emb_lr == 1e-4 and hp.emb_l2 == 1e-4 and hp.dense_lr == 1e-4
+
+
+@pytest.mark.parametrize("s", [2, 4, 8])
+def test_sqrt_scaling_matches_table8(s):
+    hp = scale_hyperparams("sqrt", batch_size=1024 * s, **BASE)
+    assert hp.emb_lr == pytest.approx(math.sqrt(s) * 1e-4)
+    assert hp.emb_l2 == pytest.approx(math.sqrt(s) * 1e-4)
+
+
+@pytest.mark.parametrize("s", [2, 4, 8])
+def test_linear_scaling_matches_table8(s):
+    hp = scale_hyperparams("linear", batch_size=1024 * s, **BASE)
+    assert hp.emb_lr == pytest.approx(s * 1e-4)
+    assert hp.emb_l2 == pytest.approx(1e-4)   # linear rule keeps lambda
+
+
+@pytest.mark.parametrize("s", [2, 4, 8])
+def test_n2_lambda_matches_table8_empirical(s):
+    # Table 8 "Empirical Scaling": LR(embed) fixed, L2 *= s^2, dense sqrt.
+    hp = scale_hyperparams("n2_lambda", batch_size=1024 * s, **BASE)
+    assert hp.emb_lr == pytest.approx(1e-4)
+    assert hp.emb_l2 == pytest.approx(s * s * 1e-4)
+    assert hp.dense_lr == pytest.approx(math.sqrt(s) * 1e-4)
+
+
+@pytest.mark.parametrize(
+    "batch,l2", [(2048, 2e-4), (8192, 8e-4), (131072, 1.28e-2)]
+)
+def test_cowclip_scaling_matches_table9(batch, l2):
+    # Table 9 Criteo column: LR(embed) 1e-4 at every batch, L2 = s * 1e-4.
+    hp = scale_hyperparams("cowclip", batch_size=batch, **BASE)
+    assert hp.emb_lr == pytest.approx(1e-4)
+    assert hp.emb_l2 == pytest.approx(l2)
+
+
+def test_dense_has_no_l2():
+    # paper appendix: no L2-regularization on dense weights
+    for rule in RULES:
+        if rule == "no_scale":
+            continue
+        hp = scale_hyperparams(rule, batch_size=4096, **BASE)
+        assert hp.dense_l2 == 0.0
+
+
+def test_rejects_bad_input():
+    with pytest.raises(ValueError):
+        scale_hyperparams("bogus", batch_size=2048, **BASE)
+    with pytest.raises(ValueError):
+        scale_hyperparams("sqrt", batch_size=1500, **BASE)

@@ -1,0 +1,52 @@
+"""Serving path: prefill_with_cache -> decode_step handoff equals pure
+step-by-step decoding, for every assigned family (incl. ring-window caches,
+SSM states, shared blocks, and prefix-fed frontends)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduce_config
+from repro.models import lm
+
+B, S, NEW = 2, 10, 4
+
+
+def _handoff_err(cfg, prefix=None):
+    params = lm.init(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (B, S + NEW), 0,
+                              cfg.vocab_size)
+    p = 0 if prefix is None else prefix.shape[1]
+
+    # path A: prefill + decode
+    la, cache, cur = lm.prefill_with_cache(params, cfg, toks[:, :S],
+                                           p + S + NEW, prefix_emb=prefix)
+    assert int(cur) == p + S
+    for t in range(S, S + NEW):
+        la, cache = lm.decode_step(params, cfg, toks[:, t], cache,
+                                   jnp.asarray(p + t, jnp.int32))
+
+    # path B: full teacher-forced forward (positions p..p+S+NEW-1)
+    full, _ = lm.forward(params, cfg, toks, prefix)
+    lb = full[:, -1]
+    return float(jnp.max(jnp.abs(la - lb)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_handoff(arch):
+    cfg = reduce_config(get_config(arch))
+    prefix = None
+    if cfg.frontend:
+        prefix = 0.1 * jax.random.normal(
+            jax.random.key(9), (B, cfg.n_prefix, cfg.d_model))
+    err = _handoff_err(cfg, prefix)
+    assert err < 5e-3, f"{arch}: {err}"
+
+
+def test_ring_cache_prefill_longer_than_window():
+    """Prompt longer than the sliding window: ring cache keeps exactly the
+    last `window` tokens and decode continues correctly."""
+    cfg = reduce_config(get_config("gemma3-12b"))       # window = 8 < S = 10
+    assert cfg.window and cfg.window < S
+    err = _handoff_err(cfg)
+    assert err < 5e-3
