@@ -12,6 +12,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -83,11 +84,115 @@ def kernel_microbench() -> list:
     return rows
 
 
+def sparse_embedding_bench(
+    out_path: str = "BENCH_sparse_embedding.json",
+    fast: bool = False,
+) -> list:
+    """Dense vs sparse embedding-update step time across a (vocab, batch)
+    grid, emitted to ``BENCH_sparse_embedding.json``.
+
+    One [vocab, 10] table through the full optimizer hot path. Dense:
+    fused CowClip+L2+Adam over the whole table (O(vocab) per step, however
+    few ids the batch touches). Sparse: unique -> gather + lazy-decay
+    catch-up -> CowClip+L2+Adam on rows -> scatter (O(n_unique)). Both are
+    the jit'd jnp paths (the Pallas kernels are TPU-targeted; interpret
+    mode is a correctness harness, not a perf path). The point the grid
+    makes: sparse step time tracks the unique-id count while dense tracks
+    vocab — at production vocabs the gap is orders of magnitude.
+    """
+    from functools import partial
+
+    import numpy as np
+
+    from repro.kernels.cowclip import ref as cc_ref
+
+    dim = 10
+    vocabs = (100_000, 1_000_000) if fast else (100_000, 1_000_000, 2_000_000)
+    batches = (1024, 8192)
+
+    # donate the table-sized state exactly as the train step does — without
+    # donation XLA copies [vocab, dim] per call and the sparse path's
+    # O(n_unique) scatter degenerates to an O(vocab) copy
+    dense_fn = jax.jit(
+        lambda w, m, v, g, cnt, step: cc_ref.cowclip_adam_reference(
+            w, g, cnt, m, v, step, lr=1e-3, l2=1e-4),
+        donate_argnums=(0, 1, 2))
+    sparse_fn = jax.jit(partial(cc_ref.sparse_cowclip_adam_reference,
+                                lr=1e-3, l2=1e-4),
+                        donate_argnums=(0, 1, 2, 3))
+
+    def timeit(fn, state, rest, n=10):
+        """Time ``fn(*state, *rest)`` threading the donated state through."""
+        state = fn(*state, *rest)
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            state = fn(*state, *rest)
+        jax.block_until_ready(state)
+        return 1e6 * (time.perf_counter() - t0) / n
+
+    records, rows = [], []
+    for vocab in vocabs:
+        key = jax.random.key(vocab)
+        ks = jax.random.split(key, 4)
+        w = 0.01 * jax.random.normal(ks[0], (vocab, dim))
+        m = jnp.zeros_like(w)
+        v = jnp.zeros_like(w)
+        ls = jnp.zeros((vocab,), jnp.int32)
+        step = jnp.asarray(3, jnp.int32)
+        for batch in batches:
+            # Zipf-ish draw: heavy duplicates, like real CTR fields
+            rng = np.random.default_rng(0)
+            raw = np.minimum(
+                rng.zipf(1.2, size=batch) - 1, vocab - 1).astype(np.int32)
+            cap = min(batch, vocab)
+            uids, _, cnt = jnp.unique(
+                jnp.asarray(raw), size=cap, fill_value=vocab,
+                return_inverse=True, return_counts=True)
+            uids = uids.astype(jnp.int32)
+            cnt = cnt.astype(jnp.float32)
+            n_unique = int((cnt > 0).sum())
+            g_rows = 0.1 * jax.random.normal(ks[1], (cap, dim))
+            g_dense = jnp.zeros_like(w).at[uids].set(g_rows, mode="drop")
+            cnt_dense = jnp.zeros((vocab,)).at[uids].set(cnt, mode="drop")
+
+            dense_us = timeit(
+                dense_fn,
+                (jnp.copy(w), jnp.copy(m), jnp.copy(v)),
+                (g_dense, cnt_dense, step))
+            sparse_us = timeit(
+                sparse_fn,
+                (jnp.copy(w), jnp.copy(m), jnp.copy(v), jnp.copy(ls)),
+                (uids, cnt, g_rows, step))
+            rec = {"vocab": vocab, "batch": batch, "n_unique": n_unique,
+                   "dense_us": dense_us, "sparse_us": sparse_us,
+                   "speedup": dense_us / max(sparse_us, 1e-9)}
+            records.append(rec)
+            rows.append(_csv(
+                f"sparse_embed/v{vocab}/b{batch}", sparse_us,
+                f"dense_us={dense_us:.1f};n_unique={n_unique};"
+                f"speedup={rec['speedup']:.1f}x"))
+
+    with open(out_path, "w") as f:
+        json.dump({"dim": dim, "records": records}, f, indent=2)
+    print(f"[sparse_embedding_bench] wrote {out_path}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced batch grid (uses/builds the same cache)")
+    ap.add_argument("--sparse-bench", action="store_true",
+                    help="run only the dense-vs-sparse embedding update grid")
     args = ap.parse_args()
+
+    if args.sparse_bench:
+        rows = sparse_embedding_bench(fast=args.fast)
+        print("\nname,us_per_call,derived")
+        for row in rows:
+            print(row)
+        return
 
     if args.fast:
         tables.SCALES = (1, 16)
@@ -127,6 +232,7 @@ def main() -> None:
                              rec["us_per_step"], f"auc={fmt_auc(rec)}"))
 
     csv_rows.extend(kernel_microbench())
+    csv_rows.extend(sparse_embedding_bench(fast=args.fast))
 
     print("\nname,us_per_call,derived")
     for row in csv_rows:

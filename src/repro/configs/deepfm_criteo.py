@@ -7,6 +7,8 @@ Criteo vocab sizes follow the standard DeepCTR preprocessing scale
 common hashed layout).
 """
 
+import dataclasses
+
 from ..models.ctr import CTRConfig
 
 # Representative per-field vocab sizes for Criteo after standard filtering
@@ -24,3 +26,11 @@ CONFIG = CTRConfig(
     emb_dim=10,
     mlp_dims=(400, 400, 400),
 )
+
+# Sparse unique-id update path: at Criteo vocabs (10M-row fields) the dense
+# optimizer streams ~372M params x 3 arrays per step; the sparse path's
+# update traffic is bounded by the batch's unique ids instead (<= 128K rows
+# per field at the paper's largest batch). This is the config production
+# deployments should start from.
+CONFIG_SPARSE = dataclasses.replace(CONFIG, sparse=True)
+

@@ -1,9 +1,16 @@
 """repro.core — the paper's contribution: CowClip + scaling rules + optimizer
 substrate (built from scratch; optax is not available offline)."""
 
-from .builders import build_optimizer, label_params, two_group
+from .builders import (
+    TrainStepBundle,
+    build_optimizer,
+    build_train_step,
+    label_params,
+    two_group,
+)
 from .cowclip import (
     cowclip,
+    cowclip_rows,
     cowclip_table,
     clip_table_global,
     clip_table_columnwise_const,
@@ -17,6 +24,7 @@ from .optim import (
     apply_updates,
     chain,
     clip_by_global_norm,
+    decay_catchup_rows,
     global_norm,
     identity,
     partition,
@@ -25,6 +33,7 @@ from .optim import (
     scale_by_neg_lr,
     scale_by_schedule,
     sgd,
+    sparse_adam_rows,
 )
 from .scaling import RULES, Hyperparams, scale_hyperparams
 from . import schedules

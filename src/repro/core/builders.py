@@ -20,7 +20,7 @@ Order notes (faithful to the paper):
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 
@@ -111,3 +111,96 @@ def build_optimizer(
     dense_tx = optim.chain(*dense_steps)
 
     return two_group(embed_tx, dense_tx)
+
+
+class TrainStepBundle(NamedTuple):
+    """A train-step triple usable by ``train.loop.train_ctr``.
+
+    step:  jit'd (params, state, batch) -> (params, state, aux)
+    init:  params -> state
+    flush: (params, state) -> (params, state); applies any deferred work
+           (the sparse path's pending lazy-L2 decay) — identity elsewhere.
+    """
+
+    step: Callable
+    init: Callable
+    flush: Callable
+
+
+TRAIN_PATHS = ("substrate", "fused", "sparse")
+
+
+def build_train_step(
+    cfg,
+    hp: Hyperparams,
+    *,
+    path: Optional[str] = None,
+    clip_kind: str = "adaptive_column",
+    r: float = 1.0,
+    zeta: float = 1e-5,
+    clip_t: float = 1.0,
+    warmup_steps: int = 0,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    use_kernel: Optional[bool] = None,
+) -> TrainStepBundle:
+    """Route a CTR train step through one of the three update paths.
+
+      substrate : composable GradientTransformation chain (the oracle)
+      fused     : dense fused Pallas CowClip+L2+Adam kernel per table
+      sparse    : unique-id gather -> fused row update -> scatter, with
+                  lazy L2 decay (O(batch) update traffic)
+
+    ``path=None`` honors the config knob: ``cfg.sparse`` selects "sparse",
+    otherwise "substrate". ``use_kernel=None`` compiles the Pallas kernels
+    on TPU and runs the identical jnp reference elsewhere (interpret-mode
+    kernels are a correctness harness, far too slow for CPU training). The
+    dense tower always runs the substrate Adam (with optional warmup).
+    """
+    from ..train import loop as loop_lib  # deferred: train imports core
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+
+    if path is None:
+        path = "sparse" if getattr(cfg, "sparse", False) else "substrate"
+    if path not in TRAIN_PATHS:
+        raise ValueError(f"unknown path {path!r}; expected one of {TRAIN_PATHS}")
+    if path == "fused" and getattr(cfg, "sparse", False):
+        # the fused entry point honors the knob and would delegate anyway;
+        # route here so the bundle carries the sparse flush
+        path = "sparse"
+
+    if path == "substrate":
+        tx = build_optimizer(hp, clip_kind=clip_kind, r=r, zeta=zeta,
+                             clip_t=clip_t, warmup_steps=warmup_steps,
+                             b1=b1, b2=b2, eps=eps)
+        step = loop_lib.make_train_step(cfg, tx)
+        return TrainStepBundle(step, tx.init, lambda p, s: (p, s))
+
+    dense_steps = []
+    if hp.dense_l2:
+        dense_steps.append(optim.add_decayed_weights(hp.dense_l2))
+    dense_steps.append(optim.scale_by_adam(b1=b1, b2=b2, eps=eps))
+    dense_lr = (
+        schedules.linear_warmup(hp.dense_lr, warmup_steps)
+        if warmup_steps else hp.dense_lr
+    )
+    dense_steps.append(optim.scale_by_neg_lr(dense_lr))
+    dense_tx = optim.chain(*dense_steps)
+
+    if path == "fused":
+        step, init = loop_lib.make_fused_train_step(
+            cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx,
+            use_kernel=use_kernel)
+        return TrainStepBundle(step, init, lambda p, s: (p, s))
+
+    if clip_kind not in ("adaptive_column", "none"):
+        raise ValueError(
+            f"sparse path supports clip_kind 'adaptive_column' or 'none', "
+            f"got {clip_kind!r} (ablation clips are substrate-only)")
+    step, init, flush = loop_lib.make_sparse_train_step(
+        cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx, use_kernel=use_kernel,
+        clip=clip_kind == "adaptive_column", b1=b1, b2=b2, eps=eps)
+    return TrainStepBundle(step, init, flush)

@@ -69,6 +69,25 @@ def cowclip_table(
     return (grad.astype(jnp.float32) * ratio[:, None]).astype(grad.dtype)
 
 
+def cowclip_rows(
+    grad_rows: jnp.ndarray,
+    weight_rows: jnp.ndarray,
+    counts: jnp.ndarray,
+    *,
+    r: float = 1.0,
+    zeta: float = 1e-5,
+) -> jnp.ndarray:
+    """CowClip on gathered unique-id rows ([n_unique, dim] sparse layout).
+
+    Identical per-row math to ``cowclip_table`` — the clip is row-local, so
+    it applies unchanged to a gathered subset; ``counts`` is the [n_unique]
+    occurrence count of each slot's id (0 on padding slots, which therefore
+    clip their already-meaningless gradient to zero). 1-dim LR-stream rows
+    stay exempt.
+    """
+    return cowclip_table(grad_rows, weight_rows, counts, r=r, zeta=zeta)
+
+
 def cowclip(r: float = 1.0, zeta: float = 1e-5) -> GradientTransformation:
     """Gradient transformation applying CowClip to a tree of embedding tables.
 

@@ -160,6 +160,106 @@ def add_decayed_weights(weight_decay: float) -> GradientTransformation:
     return GradientTransformation(init_fn, update_fn)
 
 
+# ---------------------------------------------------------------------------
+# sparse row-wise variants (unique-id embedding update path)
+# ---------------------------------------------------------------------------
+#
+# The dense embedding optimizer applies, to EVERY row of a [vocab, dim]
+# table, every step:
+#
+#     g <- clip(g) + l2 * w ;  Adam(m, v, g) ;  w <- w - lr * update
+#
+# For a row whose id is absent from the batch the loss gradient is zero, so
+# the step degenerates to a pure coupled-L2 "decay" iteration
+# (g = l2 * w) — the paper's "absent ids keep decaying" semantics. The
+# sparse path therefore keeps a per-row ``last_step`` array and, when a row
+# is next touched, first *catches up* the decay-only iterations it missed
+# (steps last_step+1 .. t-1), then applies the real gradient step at t.
+# Replaying the recursion exactly (same f32 op order as the dense chain)
+# makes the two paths bitwise-close; there is no closed form because Adam's
+# denominator evolves with the decayed weight. Note the replay is required
+# even at l2 == 0: Adam's momentum keeps moving a once-touched row
+# (g = 0 but w -= lr * m_hat / (sqrt(v_hat) + eps) with decaying m, v).
+
+
+def _decay_iteration(w, m, v, s, *, lr, l2, b1, b2, eps):
+    """One dense-equivalent step with zero loss gradient, at global step s."""
+    g = l2 * w
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * jnp.square(g)
+    s_f = s.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1.0 - b1**s_f)
+    nu_hat_scale = 1.0 / (1.0 - b2**s_f)
+    w = w - lr * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+    return w, m, v
+
+
+def decay_catchup_rows(
+    w_rows: jnp.ndarray,      # [n, dim] gathered rows (f32 math)
+    m_rows: jnp.ndarray,      # [n, dim] Adam first moment rows
+    v_rows: jnp.ndarray,      # [n, dim] Adam second moment rows
+    last_step: jnp.ndarray,   # [n] int32, step each row was last updated at
+    step: jnp.ndarray,        # scalar int32: rows catch up THROUGH this step
+    *,
+    lr: float,
+    l2: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """Apply each row's pending decay-only steps last_step+1 .. step.
+
+    Rows advance independently (per-row trip counts via masking under a
+    shared ``max(k)`` loop). Returns (w, m, v) in f32.
+    """
+    w = w_rows.astype(jnp.float32)
+    m = m_rows.astype(jnp.float32)
+    v = v_rows.astype(jnp.float32)
+    k = jnp.maximum(step - last_step, 0)                     # [n]
+    k_max = jnp.max(k) if k.size else jnp.zeros((), jnp.int32)
+
+    def body(i, wmv):
+        w, m, v = wmv
+        s = last_step + 1 + i                                # [n] global step
+        w2, m2, v2 = _decay_iteration(
+            w, m, v, s[:, None], lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+        live = (i < k)[:, None]
+        return (jnp.where(live, w2, w), jnp.where(live, m2, m),
+                jnp.where(live, v2, v))
+
+    return jax.lax.fori_loop(0, k_max, body, (w, m, v))
+
+
+def sparse_adam_rows(
+    g_rows: jnp.ndarray,      # [n, dim] clipped task-loss gradient rows
+    w_rows: jnp.ndarray,      # [n, dim] rows already caught up through t-1
+    m_rows: jnp.ndarray,
+    v_rows: jnp.ndarray,
+    step: jnp.ndarray,        # scalar int32 t, 1-based
+    *,
+    lr: float,
+    l2: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """The real update at step t on gathered rows: coupled L2 + Adam + apply.
+
+    Identical math to ``add_decayed_weights`` -> ``scale_by_adam`` ->
+    ``scale_by_neg_lr`` on a full table, restricted to the touched rows.
+    Returns (w, m, v) in f32.
+    """
+    w = w_rows.astype(jnp.float32)
+    g = g_rows.astype(jnp.float32) + l2 * w
+    m = b1 * m_rows.astype(jnp.float32) + (1.0 - b1) * g
+    v = b2 * v_rows.astype(jnp.float32) + (1.0 - b2) * jnp.square(g)
+    t = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1.0 - b1**t)
+    nu_hat_scale = 1.0 / (1.0 - b2**t)
+    w = w - lr * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+    return w, m, v
+
+
 def global_norm(tree: PyTree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
     if not leaves:

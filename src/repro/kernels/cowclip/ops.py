@@ -1,8 +1,10 @@
-"""jit'd public wrapper for the fused CowClip update.
+"""jit'd public wrappers for the fused CowClip updates (dense + sparse).
 
 ``fused_cowclip_adam`` dispatches to the Pallas kernel (interpret mode on
 CPU — executes the kernel body in Python for correctness; compiled Mosaic on
 real TPU), with the pure-jnp oracle available as ``reference``.
+``sparse_gather_catchup`` / ``sparse_update_scatter`` are the unique-id-path
+equivalents; their oracles live in ``ref`` as ``sparse_*_reference``.
 """
 
 from __future__ import annotations
@@ -11,6 +13,7 @@ from functools import partial
 
 import jax
 
+from . import ref, sparse
 from .cowclip import cowclip_adam_update
 from .ref import cowclip_adam_reference as reference
 
@@ -37,3 +40,57 @@ def fused_cowclip_adam(
         w, g, cnt, m, v, step, r=r, zeta=zeta, lr=lr, l2=l2, b1=b1, b2=b2,
         eps=eps, block_rows=block_rows, interpret=not _on_tpu(),
     )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("lr", "l2", "b1", "b2", "eps", "use_kernel"),
+)
+def sparse_gather_catchup(
+    w, m, v, last_step, uids, counts, step, *,
+    lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8, use_kernel=True,
+):
+    """Gather unique rows + replay pending lazy-L2 decay (through step - 1).
+
+    ``uids`` are the raw slot uids (pads out of range); remapping for the
+    kernel's index maps happens here. Returns f32 (w_rows, m_rows, v_rows).
+    """
+    kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+    if not use_kernel:
+        return ref.sparse_gather_catchup_reference(
+            w, m, v, last_step, uids, step, **kw)
+    su = sparse.safe_uids(uids, counts)
+    return sparse.sparse_gather_catchup(
+        w, m, v, last_step[su], su, step, interpret=not _on_tpu(), **kw)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("r", "zeta", "lr", "l2", "b1", "b2", "eps", "use_kernel",
+                     "clip"),
+    donate_argnums=(0, 1, 2, 3),
+)
+def sparse_update_scatter(
+    w, m, v, last_step, uids, counts, w_rows, g_rows, m_rows, v_rows, step, *,
+    r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
+    use_kernel=True, clip=True,
+):
+    """CowClip+L2+Adam on caught-up rows, scattered back into the tables.
+
+    Returns (w, m, v, last_step); absent ids' rows are untouched (decay
+    stays pending in ``last_step``).
+    """
+    if not use_kernel:
+        return ref.sparse_update_scatter_reference(
+            w, m, v, last_step, uids, counts, w_rows, g_rows, m_rows, v_rows,
+            step, r=r, zeta=zeta, lr=lr, l2=l2, b1=b1, b2=b2, eps=eps,
+            clip=clip)
+    su = sparse.safe_uids(uids, counts)
+    w, m, v = sparse.sparse_update_scatter(
+        w, m, v, su, counts, w_rows, g_rows, m_rows, v_rows, step,
+        r=r, zeta=zeta, lr=lr, l2=l2, b1=b1, b2=b2, eps=eps, clip=clip,
+        interpret=not _on_tpu(),
+    )
+    last_step = last_step.at[uids].set(
+        step.astype(last_step.dtype), mode="drop")
+    return w, m, v, last_step

@@ -1,15 +1,18 @@
-"""Pure-jnp oracle for the fused CowClip+L2+Adam kernel.
+"""Pure-jnp oracles for the fused CowClip+L2+Adam kernels (dense + sparse).
 
 Composes the framework's own building blocks (``core.cowclip.cowclip_table``
-+ coupled L2 + Adam with bias correction) so the kernel is checked against
-the exact math the optimizer substrate uses.
++ coupled L2 + Adam with bias correction) so the kernels are checked against
+the exact math the optimizer substrate uses. The sparse oracles additionally
+compose ``core.optim.decay_catchup_rows`` / ``sparse_adam_rows`` — the lazy
+L2 decay semantics the unique-id path must preserve.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ...core.cowclip import cowclip_table
+from ...core.cowclip import cowclip_rows, cowclip_table
+from ...core.optim import decay_catchup_rows, sparse_adam_rows
 
 
 def cowclip_adam_reference(
@@ -28,3 +31,70 @@ def cowclip_adam_reference(
     v_hat = v32 / (1.0 - b2**t)
     w32 = w32 - lr * m_hat / (jnp.sqrt(v_hat) + eps)
     return w32.astype(w.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sparse unique-id path
+# ---------------------------------------------------------------------------
+
+
+def sparse_gather_catchup_reference(
+    w, m, v, last_step, uids, step, *,
+    lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
+):
+    """Gather unique rows and replay their pending decay-only steps.
+
+    ``uids`` is [capacity] int32 (pad slots out of range — their gather
+    clips to the last row and produces garbage that is masked downstream).
+    Rows come out caught up **through step - 1**, i.e. as the dense path
+    would see them at the start of step ``step``. Returns f32
+    (w_rows, m_rows, v_rows).
+    """
+    w_rows = w[uids]
+    m_rows = m[uids]
+    v_rows = v[uids]
+    ls = last_step[uids]
+    return decay_catchup_rows(
+        w_rows, m_rows, v_rows, ls, step - 1,
+        lr=lr, l2=l2, b1=b1, b2=b2, eps=eps,
+    )
+
+
+def sparse_update_scatter_reference(
+    w, m, v, last_step, uids, counts, w_rows, g_rows, m_rows, v_rows, step, *,
+    r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
+    clip=True,
+):
+    """CowClip + coupled L2 + Adam on caught-up rows, scattered back.
+
+    Pad slots carry out-of-range uids and are dropped by the scatter; their
+    row values never land. Returns (w, m, v, last_step) full tables.
+    """
+    g32 = g_rows.astype(jnp.float32)
+    if clip:
+        g32 = cowclip_rows(g32, w_rows, counts, r=r, zeta=zeta)
+    w_new, m_new, v_new = sparse_adam_rows(
+        g32, w_rows, m_rows, v_rows, step,
+        lr=lr, l2=l2, b1=b1, b2=b2, eps=eps,
+    )
+    w = w.at[uids].set(w_new.astype(w.dtype), mode="drop")
+    m = m.at[uids].set(m_new.astype(m.dtype), mode="drop")
+    v = v.at[uids].set(v_new.astype(v.dtype), mode="drop")
+    last_step = last_step.at[uids].set(
+        step.astype(last_step.dtype), mode="drop")
+    return w, m, v, last_step
+
+
+def sparse_cowclip_adam_reference(
+    w, m, v, last_step, uids, counts, g_rows, step, *,
+    r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
+):
+    """Full sparse step oracle (gather -> catch-up -> clip -> Adam -> scatter)
+    given the task-loss gradient on gathered rows. The per-step dense
+    equivalent is ``cowclip_adam_reference`` over the whole table."""
+    kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+    w_rows, m_rows, v_rows = sparse_gather_catchup_reference(
+        w, m, v, last_step, uids, step, **kw)
+    return sparse_update_scatter_reference(
+        w, m, v, last_step, uids, counts, w_rows, g_rows, m_rows, v_rows,
+        step, r=r, zeta=zeta, **kw)

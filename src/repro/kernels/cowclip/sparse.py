@@ -1,0 +1,231 @@
+"""Pallas TPU kernels: sparse unique-id CowClip+L2+Adam embedding update.
+
+The dense fused kernel (``cowclip.py``) still streams the full ``[vocab,
+dim]`` table plus both Adam moments through HBM every step, although a batch
+touches only its unique ids. These kernels restrict the whole update to the
+``[n_unique, dim]`` gathered rows, making optimizer HBM traffic O(batch)
+instead of O(vocab) — the layout production CTR systems use
+(arXiv:2201.05500 §4, arXiv:2209.05310 §6).
+
+The logical pipeline is **gather -> lazy-decay catch-up -> CowClip -> Adam ->
+scatter**, split into two kernels only because the task-loss gradient is
+computed (by the model's backward pass) *between* the catch-up and the clip —
+the forward must see rows with their pending L2 decay applied or the two
+paths diverge:
+
+* ``sparse_gather_catchup``: one pass over unique rows; for each slot, DMA
+  the id's (w, m, v) row from HBM via a scalar-prefetched index map, replay
+  its missed decay-only Adam steps (ids absent from a batch still decay
+  under coupled L2 — paper's zeta discussion), and emit the caught-up rows.
+* ``sparse_update_scatter``: one pass over unique rows; CowClip (per-id
+  count-scaled adaptive threshold) -> coupled L2 -> Adam on the row, written
+  straight back to the table's HBM row through an aliased output whose index
+  map scatters by uid. Rows of absent ids are never touched.
+
+Pad-slot handling (capacity > n_unique): slot uids are remapped on the host
+to the **last real slot's uid** before entering a kernel, so every block
+index is in range; pad iterations skip their write (``counts == 0``) and,
+because consecutive grid steps then map the same output block, Pallas defers
+the single copy-out until the end — the real slot's value lands exactly
+once. The raw (out-of-range) uids are kept for the XLA-side ``mode='drop'``
+scatters (``last_step``) and the jnp reference.
+
+Grid = one row per step: gathered rows are not contiguous, so blocks cannot
+span slots. ``dim`` (10 for CTR) under-fills the 128-wide lanes; at
+production scale the win is ending O(vocab) HBM streaming, not lane
+utilization. All math f32, matching ``ref.py`` bit-for-bit in op order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def safe_uids(uids: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Remap pad slots (count 0) to the last real slot's uid.
+
+    Keeps every kernel block index in range while preserving the
+    revisit-coalescing that makes pad slots free (see module docstring).
+    """
+    n_real = jnp.maximum(jnp.sum((counts > 0).astype(jnp.int32)), 1)
+    last_real = uids[n_real - 1]
+    return jnp.where(counts > 0, uids, last_real).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# kernel A: gather + lazy-decay catch-up
+# ---------------------------------------------------------------------------
+
+
+def _catchup_kernel(uids_ref, w_ref, m_ref, v_ref, ls_ref, lim_ref,
+                    w_out, m_out, v_out, *, lr, l2, b1, b2, eps):
+    del uids_ref  # consumed by the index maps
+    w = w_ref[...].astype(jnp.float32)            # (1, dim)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    ls = ls_ref[0]                                # row's last-updated step
+    lim = lim_ref[0]                              # catch up through this step
+
+    def body(i, wmv):
+        w, m, v = wmv
+        s = (ls + 1 + i).astype(jnp.float32)      # global step being replayed
+        g = l2 * w
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mu_scale = 1.0 / (1.0 - b1**s)
+        nu_scale = 1.0 / (1.0 - b2**s)
+        w = w - lr * (m * mu_scale) / (jnp.sqrt(v * nu_scale) + eps)
+        return w, m, v
+
+    # replay even at l2 == 0: Adam momentum keeps moving a once-touched row
+    k = jnp.maximum(lim - ls, 0)
+    w, m, v = jax.lax.fori_loop(0, k, body, (w, m, v))
+    w_out[...] = w
+    m_out[...] = m
+    v_out[...] = v
+
+
+def sparse_gather_catchup(
+    w: jnp.ndarray,           # [vocab, dim] table
+    m: jnp.ndarray,           # [vocab, dim] Adam first moment
+    v: jnp.ndarray,           # [vocab, dim] Adam second moment
+    ls_rows: jnp.ndarray,     # [cap] int32 last_step gathered per slot
+    uids: jnp.ndarray,        # [cap] int32 in-range slot uids (safe_uids)
+    step: jnp.ndarray,        # scalar int32 t: catch rows up through t-1
+    *,
+    lr: float,
+    l2: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    interpret: bool = False,
+):
+    """Fused gather + decay catch-up. Returns f32 (w_rows, m_rows, v_rows)."""
+    cap = uids.shape[0]
+    dim = w.shape[1]
+    lim = jnp.full((cap,), step - 1, jnp.int32)
+
+    row_by_uid = pl.BlockSpec((1, dim), lambda i, uids_ref: (uids_ref[i], 0))
+    row_by_slot = pl.BlockSpec((1, dim), lambda i, uids_ref: (i, 0))
+    scalar_by_slot = pl.BlockSpec((1,), lambda i, uids_ref: (i,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(cap,),
+        in_specs=[row_by_uid, row_by_uid, row_by_uid,
+                  scalar_by_slot, scalar_by_slot],
+        out_specs=[row_by_slot, row_by_slot, row_by_slot],
+    )
+    kernel = functools.partial(
+        _catchup_kernel, lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((cap, dim), jnp.float32)] * 3,
+        interpret=interpret,
+    )(uids, w, m, v, ls_rows, lim)
+
+
+# ---------------------------------------------------------------------------
+# kernel B: CowClip + L2 + Adam + scatter (in-place on the tables)
+# ---------------------------------------------------------------------------
+
+
+def _update_kernel(uids_ref, bc_ref, w_tab_ref, m_tab_ref, v_tab_ref,
+                   wr_ref, gr_ref, cnt_ref, mr_ref, vr_ref,
+                   w_out, m_out, v_out,
+                   *, r, zeta, lr, l2, b1, b2, eps, do_clip):
+    del uids_ref, w_tab_ref, m_tab_ref, v_tab_ref  # alias/index-map only
+    cnt = cnt_ref[0]
+
+    @pl.when(cnt > 0.0)                            # pad slots write nothing
+    def _():
+        w = wr_ref[...].astype(jnp.float32)        # (1, dim), caught-up row
+        g = gr_ref[...].astype(jnp.float32)
+        m = mr_ref[...].astype(jnp.float32)
+        v = vr_ref[...].astype(jnp.float32)
+        bc1 = bc_ref[0, 0]                         # 1/(1-b1^t)
+        bc2 = bc_ref[0, 1]                         # 1/(1-b2^t)
+
+        if do_clip:
+            gnorm = jnp.sqrt(jnp.sum(g * g))
+            wnorm = jnp.sqrt(jnp.sum(w * w))
+            clip_t = cnt * jnp.maximum(r * wnorm, zeta)
+            g = g * jnp.minimum(1.0, clip_t / (gnorm + 1e-30))
+
+        g = g + l2 * w
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        w = w - lr * (m * bc1) / (jnp.sqrt(v * bc2) + eps)
+
+        w_out[...] = w.astype(w_out.dtype)
+        m_out[...] = m.astype(m_out.dtype)
+        v_out[...] = v.astype(v_out.dtype)
+
+
+def sparse_update_scatter(
+    w: jnp.ndarray,           # [vocab, dim] table (donated, updated in place)
+    m: jnp.ndarray,           # [vocab, dim] Adam first moment (donated)
+    v: jnp.ndarray,           # [vocab, dim] Adam second moment (donated)
+    uids: jnp.ndarray,        # [cap] int32 in-range slot uids (safe_uids)
+    counts: jnp.ndarray,      # [cap] f32 per-slot batch counts (0 on pads)
+    w_rows: jnp.ndarray,      # [cap, dim] caught-up rows (f32)
+    g_rows: jnp.ndarray,      # [cap, dim] task-loss gradient on rows
+    m_rows: jnp.ndarray,      # [cap, dim] caught-up first moment rows
+    v_rows: jnp.ndarray,      # [cap, dim] caught-up second moment rows
+    step: jnp.ndarray,        # scalar int32 t, 1-based
+    *,
+    r: float = 1.0,
+    zeta: float = 1e-5,
+    lr: float = 1e-4,
+    l2: float = 1e-5,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    clip: bool = True,
+    interpret: bool = False,
+):
+    """Fused CowClip+L2+Adam over unique rows, scattered into the tables
+    through aliased outputs. Returns updated (w, m, v) full tables; rows of
+    ids absent from the batch are not touched (their decay stays pending)."""
+    cap = uids.shape[0]
+    dim = w.shape[1]
+    t = step.astype(jnp.float32)
+    bc = jnp.stack([1.0 / (1.0 - b1**t), 1.0 / (1.0 - b2**t)]).reshape(1, 2)
+
+    row_by_uid = pl.BlockSpec((1, dim), lambda i, uids_ref: (uids_ref[i], 0))
+    row_by_slot = pl.BlockSpec((1, dim), lambda i, uids_ref: (i, 0))
+    scalar_by_slot = pl.BlockSpec((1,), lambda i, uids_ref: (i,))
+    bc_block = pl.BlockSpec((1, 2), lambda i, uids_ref: (0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(cap,),
+        in_specs=[bc_block, row_by_uid, row_by_uid, row_by_uid,
+                  row_by_slot, row_by_slot, scalar_by_slot,
+                  row_by_slot, row_by_slot],
+        out_specs=[row_by_uid, row_by_uid, row_by_uid],
+    )
+    kernel = functools.partial(
+        _update_kernel, r=r, zeta=zeta, lr=lr, l2=l2, b1=b1, b2=b2, eps=eps,
+        # paper appendix: 1-dim LR-stream tables are CowClip-exempt
+        do_clip=clip and dim >= 2,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        # (w, m, v) table inputs alias the three outputs: untouched rows are
+        # never DMA'd, so the update writes only O(n_unique) HBM traffic.
+        input_output_aliases={2: 0, 3: 1, 4: 2},
+        interpret=interpret,
+    )(uids, bc, w, m, v, w_rows, g_rows, counts, m_rows, v_rows)

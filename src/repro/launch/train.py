@@ -49,6 +49,7 @@ def run_ctr(args) -> None:
         name=args.model, vocab_sizes=ds.vocab_sizes,
         n_dense=ds.dense.shape[1], emb_dim=args.emb_dim,
         mlp_dims=(args.mlp_dim,) * 3, emb_sigma=1e-2,
+        sparse=args.sparse, unique_capacity=args.unique_capacity,
     )
     n_params = sum(
         int(np.prod(x.shape)) for x in jax.tree.leaves(
@@ -63,10 +64,20 @@ def run_ctr(args) -> None:
         base_dense_lr=2 * args.base_lr,
     )
     clip = "adaptive_column" if args.rule == "cowclip" else "none"
-    tx = build_optimizer(hp, clip_kind=clip, zeta=args.zeta,
-                         warmup_steps=max(1, len(tr) // args.batch))
+    warmup = max(1, len(tr) // args.batch)
+    if cfg.sparse:
+        from ..core import build_train_step
+
+        bundle = build_train_step(cfg, hp, clip_kind=clip, zeta=args.zeta,
+                                  warmup_steps=warmup)
+        tx = None
+    else:
+        bundle = None
+        tx = build_optimizer(hp, clip_kind=clip, zeta=args.zeta,
+                             warmup_steps=warmup)
     res = train_ctr(cfg, tx, tr, te, batch_size=args.batch,
-                    epochs=args.epochs, seed=args.seed, log_fn=print)
+                    epochs=args.epochs, seed=args.seed, log_fn=print,
+                    step_bundle=bundle)
     print(f"[train] done: {res.steps} steps in {res.seconds:.1f}s "
           f"-> AUC {100*res.final_eval['auc']:.2f} "
           f"logloss {res.final_eval['logloss']:.4f}")
@@ -159,6 +170,12 @@ def main():
     ap.add_argument("--base-lr", type=float, default=2e-2)
     ap.add_argument("--base-l2", type=float, default=1e-5)
     ap.add_argument("--zeta", type=float, default=1e-5)
+    ap.add_argument("--sparse", action="store_true",
+                    help="unique-id embedding update path (gather -> fused "
+                         "CowClip/L2/Adam -> scatter, lazy L2 decay)")
+    ap.add_argument("--unique-capacity", type=int, default=0,
+                    help="padded per-field unique-id capacity; 0 = exact "
+                         "min(batch, vocab) default")
     ap.add_argument("--epochs", type=int, default=10)
     # lm
     ap.add_argument("--arch", default="gemma3-12b")

@@ -31,6 +31,15 @@ class CTRConfig:
     n_cross: int = 3
     emb_sigma: float = 1e-4        # 1e-2 for CowClip's large-init variant
     dtype: str = "float32"
+    # Sparse unique-id update path: embedding forward/backward/optimizer run
+    # on [n_unique, dim] gathered rows instead of the full [vocab, dim]
+    # tables (update traffic O(batch) instead of O(vocab)). The dense path
+    # stays available as the exactness oracle.
+    sparse: bool = False
+    # Padded capacity of the per-field unique-id set; <= 0 means the exact
+    # default min(batch, vocab_f). Smaller values bound memory but drop
+    # gradient contributions on overflow (see models/embedding.py).
+    unique_capacity: int = 0
 
     @property
     def n_fields(self) -> int:
@@ -111,16 +120,57 @@ def init(key: jax.Array, cfg: CTRConfig) -> dict:
     return {"embed": embed, "dense": dense}
 
 
-def _first_order(lin_tables: dict, ids: jnp.ndarray) -> jnp.ndarray:
-    """LR stream: sum of 1-dim id weights. [B]"""
-    return embedding.lookup(lin_tables, ids)[..., 0].sum(axis=1)
-
-
 def _fm_second_order(emb: jnp.ndarray) -> jnp.ndarray:
     """Factorization-machine pairwise term 0.5*((sum e)^2 - sum e^2). [B]"""
     s = emb.sum(axis=1)                    # [B, D]
     s2 = jnp.square(emb).sum(axis=1)       # [B, D]
     return 0.5 * (jnp.square(s) - s2).sum(axis=-1)
+
+
+def _forward_from_emb(
+    dense_params: dict,
+    cfg: CTRConfig,
+    emb: jnp.ndarray,
+    lin_emb: jnp.ndarray | None,
+    dense_feats: jnp.ndarray,
+) -> jnp.ndarray:
+    """Model combiner from already-looked-up embeddings -> logits [B].
+
+    ``emb`` is [B, F, D]; ``lin_emb`` is the [B, F, 1] first-order stream for
+    wd/deepfm (None otherwise). Shared by the dense (full-table lookup) and
+    sparse (unique-row gather) paths so both stay one forward definition.
+    """
+    flat = emb.reshape(emb.shape[0], -1)
+    x0 = jnp.concatenate([flat, dense_feats], axis=-1)        # [B, d0]
+    n_mlp = len(cfg.mlp_dims)
+    deep = jax.nn.relu(_apply_mlp(dense_params["mlp"], x0, n_mlp))
+
+    if cfg.name == "wd":
+        lin = lin_emb[..., 0].sum(axis=1) + dense_params["lin_bias"]
+        out = _apply_mlp(dense_params["deep_out"], deep, 1)[:, 0]
+        return lin + out
+    if cfg.name == "deepfm":
+        lin = lin_emb[..., 0].sum(axis=1) + dense_params["lin_bias"]
+        fm = _fm_second_order(emb)
+        out = _apply_mlp(dense_params["deep_out"], deep, 1)[:, 0]
+        return lin + fm + out
+    if cfg.name == "dcn":
+        x = x0
+        cp = dense_params["cross"]
+        for i in range(cfg.n_cross):
+            # x_{l+1} = x0 * (x_l . w_l) + b_l + x_l
+            x = x0 * (x @ cp[f"w{i}"])[:, None] + cp[f"b{i}"] + x
+        combined = jnp.concatenate([x, deep], axis=-1)
+        return _apply_mlp(dense_params["combine"], combined, 1)[:, 0]
+    if cfg.name == "dcnv2":
+        x = x0
+        cp = dense_params["cross"]
+        for i in range(cfg.n_cross):
+            # x_{l+1} = x0 ⊙ (W_l x_l + b_l) + x_l
+            x = x0 * (x @ cp[f"w{i}"] + cp[f"b{i}"]) + x
+        combined = jnp.concatenate([x, deep], axis=-1)
+        return _apply_mlp(dense_params["combine"], combined, 1)[:, 0]
+    raise ValueError(cfg.name)
 
 
 def apply(
@@ -131,37 +181,43 @@ def apply(
 ) -> jnp.ndarray:
     """Forward pass -> logits [B] (sigmoid applied in the loss)."""
     emb = embedding.lookup(params["embed"]["fm"], ids)        # [B, F, D]
-    flat = emb.reshape(emb.shape[0], -1)
-    x0 = jnp.concatenate([flat, dense_feats], axis=-1)        # [B, d0]
-    n_mlp = len(cfg.mlp_dims)
-    deep = jax.nn.relu(_apply_mlp(params["dense"]["mlp"], x0, n_mlp))
+    lin_emb = (
+        embedding.lookup(params["embed"]["lin"], ids)
+        if "lin" in params["embed"] else None
+    )
+    return _forward_from_emb(params["dense"], cfg, emb, lin_emb, dense_feats)
 
-    if cfg.name == "wd":
-        lin = _first_order(params["embed"]["lin"], ids) + params["dense"]["lin_bias"]
-        out = _apply_mlp(params["dense"]["deep_out"], deep, 1)[:, 0]
-        return lin + out
-    if cfg.name == "deepfm":
-        lin = _first_order(params["embed"]["lin"], ids) + params["dense"]["lin_bias"]
-        fm = _fm_second_order(emb)
-        out = _apply_mlp(params["dense"]["deep_out"], deep, 1)[:, 0]
-        return lin + fm + out
-    if cfg.name == "dcn":
-        x = x0
-        cp = params["dense"]["cross"]
-        for i in range(cfg.n_cross):
-            # x_{l+1} = x0 * (x_l . w_l) + b_l + x_l
-            x = x0 * (x @ cp[f"w{i}"])[:, None] + cp[f"b{i}"] + x
-        combined = jnp.concatenate([x, deep], axis=-1)
-        return _apply_mlp(params["dense"]["combine"], combined, 1)[:, 0]
-    if cfg.name == "dcnv2":
-        x = x0
-        cp = params["dense"]["cross"]
-        for i in range(cfg.n_cross):
-            # x_{l+1} = x0 ⊙ (W_l x_l + b_l) + x_l
-            x = x0 * (x @ cp[f"w{i}"] + cp[f"b{i}"]) + x
-        combined = jnp.concatenate([x, deep], axis=-1)
-        return _apply_mlp(params["dense"]["combine"], combined, 1)[:, 0]
-    raise ValueError(cfg.name)
+
+def unique_batch(cfg: CTRConfig, ids: jnp.ndarray) -> dict:
+    """Per-field unique-id dedup for the sparse path: {"field_i": UniqueField}.
+
+    One dedup serves every embedding group (fm and lin tables of a field see
+    the same ids).
+    """
+    return embedding.batch_unique(ids, cfg.vocab_sizes,
+                                  capacity=cfg.unique_capacity)
+
+
+def gather_embed_rows(params: dict, uniq: dict) -> dict:
+    """Gather each embedding group's unique rows, tree-shaped like
+    ``params["embed"]`` with [capacity_f, dim] leaves."""
+    return {g: embedding.gather_rows(tables, uniq)
+            for g, tables in params["embed"].items()}
+
+
+def apply_rows(
+    rows: dict,
+    dense_params: dict,
+    cfg: CTRConfig,
+    uniq: dict,
+    dense_feats: jnp.ndarray,
+) -> jnp.ndarray:
+    """Sparse forward: logits from gathered unique rows (same math as
+    ``apply``; the gradient w.r.t. ``rows`` materializes as [n_unique, dim]
+    per field instead of a full-table scatter-add)."""
+    emb = embedding.lookup_rows(rows["fm"], uniq)             # [B, F, D]
+    lin_emb = embedding.lookup_rows(rows["lin"], uniq) if "lin" in rows else None
+    return _forward_from_emb(dense_params, cfg, emb, lin_emb, dense_feats)
 
 
 def batch_counts(cfg: CTRConfig, ids: jnp.ndarray, params: dict) -> dict:

@@ -5,17 +5,34 @@ Table 1). Layout decisions:
 
 * One table per categorical field, ``[vocab_f, dim]`` — an id's vector is a
   *row* (the paper's "column"). Tables live under ``params["embed"]``.
-* Batch occurrence counts (the ``cnt`` in Alg. 1 line 7) are a single
-  ``segment_sum`` per field — dense, TPU-friendly, fuses with the backward
-  scatter-add.
 * Forward lookup is ``jnp.take`` (gather); under pjit with row-sharded tables
   XLA partitions this into the standard all-gather-free dynamic-slice +
   all-reduce pattern.
+
+Sparse unique-id layer
+----------------------
+A batch — even at the paper's 128K scale — touches only the ids that occur
+in it, so the update path can work on ``[n_unique, dim]`` gathered rows
+instead of streaming the whole ``[vocab, dim]`` table (the layout every
+terabyte-scale CTR system uses; arXiv:2201.05500, arXiv:2209.05310).
+``unique_ids`` deduplicates one field's batch column with a **static padded
+capacity** (jit-stable shapes):
+
+* slots ``[0, n_unique)`` hold the batch's distinct ids ascending; padding
+  slots hold ``vocab`` (one past the last row) so scatters with
+  ``mode='drop'`` ignore them and their counts are 0.
+* batch occurrence counts (CowClip's ``cnt``, Alg. 1 line 7) come out of the
+  same dedup pass over the *unique set* — no ``[vocab]`` segment_sum.
+* **overflow** (more distinct ids than ``capacity`` — impossible at the
+  default ``capacity = min(batch, vocab)``): the ``capacity`` smallest ids
+  are kept; dropped ids alias the last kept slot in the forward (their
+  gradient lands there) and receive no update themselves. Overflow trades
+  exactness for a hard memory bound; detect it via ``counts.sum() < batch``.
 """
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,10 +70,94 @@ def lookup(tables: dict, ids: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack(cols, axis=1)
 
 
-def field_counts(ids: jnp.ndarray, vocab_sizes: Sequence[int]) -> dict:
-    """Per-field id occurrence counts in the batch (CowClip's ``cnt``).
+class UniqueField(NamedTuple):
+    """Static-size dedup of one field's batch ids (a pytree node).
 
-    Returns a tree matching the tables tree with [vocab_f] float32 leaves.
+    uids:   [capacity] int32, distinct batch ids ascending; pad slots hold
+            ``vocab`` (out of range -> dropped by ``mode='drop'`` scatters).
+    inv:    [batch] int32, slot of each batch element's id. On capacity
+            overflow, dropped ids carry out-of-range slots that JAX's gather
+            clips to the last kept slot.
+    counts: [capacity] float32 batch occurrence count per slot (0 on pads).
+    """
+
+    uids: jnp.ndarray
+    inv: jnp.ndarray
+    counts: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return self.uids.shape[0]
+
+    def n_unique(self) -> jnp.ndarray:
+        """Number of real (non-pad) slots, traced."""
+        return jnp.sum((self.counts > 0).astype(jnp.int32))
+
+
+def unique_ids(ids_col: jnp.ndarray, vocab: int, capacity: int) -> UniqueField:
+    """Deduplicate one field's batch column into a padded-capacity slot set."""
+    uids, inv, counts = jnp.unique(
+        ids_col, size=capacity, fill_value=vocab,
+        return_inverse=True, return_counts=True,
+    )
+    return UniqueField(
+        uids=uids.astype(jnp.int32),
+        inv=inv.reshape(ids_col.shape).astype(jnp.int32),
+        counts=counts.astype(jnp.float32),
+    )
+
+
+def batch_unique(
+    ids: jnp.ndarray,
+    vocab_sizes: Sequence[int],
+    capacity: int = 0,
+) -> dict:
+    """Per-field dedup of a [batch, n_fields] id matrix.
+
+    ``capacity`` <= 0 selects the exact default ``min(batch, vocab_f)`` per
+    field; a positive value caps every field at ``min(capacity, vocab_f)``.
+    Returns ``{"field_i": UniqueField}``.
+    """
+    b = ids.shape[0]
+    out = {}
+    for i, v in enumerate(vocab_sizes):
+        cap = min(b, v) if capacity <= 0 else min(capacity, v)
+        out[f"field_{i}"] = unique_ids(ids[:, i], v, cap)
+    return out
+
+
+def gather_rows(tables: dict, uniq: dict) -> dict:
+    """Gather each field's unique rows: ``{"field_i": [capacity_i, dim]}``.
+
+    Pad slots (uid == vocab) clip to the last row — garbage values that are
+    never read back (inv never points at a pad slot) nor scattered.
+    """
+    return {f: tables[f][u.uids] for f, u in uniq.items()}
+
+
+def scatter_rows(tables: dict, uniq: dict, rows: dict) -> dict:
+    """Write updated unique rows back; pad slots (uid out of range) drop."""
+    return {
+        f: tables[f].at[uniq[f].uids].set(
+            rows[f].astype(tables[f].dtype), mode="drop")
+        for f in tables
+    }
+
+
+def lookup_rows(rows: dict, uniq: dict) -> jnp.ndarray:
+    """Forward lookup from gathered unique rows -> [batch, n_fields, dim]."""
+    cols = [rows[f"field_{i}"][uniq[f"field_{i}"].inv]
+            for i in range(len(uniq))]
+    return jnp.stack(cols, axis=1)
+
+
+def field_counts(ids: jnp.ndarray, vocab_sizes: Sequence[int]) -> dict:
+    """Per-field id occurrence counts in the batch (CowClip's ``cnt``),
+    for the dense/fused paths: one ``segment_sum`` per field, fusing with
+    the backward scatter-add. Returns a tree matching the tables tree with
+    [vocab_f] float32 leaves. The sparse path never materializes these —
+    its counts come out of the ``batch_unique`` dedup directly
+    (``UniqueField.counts``).
     """
     b = ids.shape[0]
     ones = jnp.ones((b,), jnp.float32)

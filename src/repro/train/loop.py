@@ -16,6 +16,7 @@ import numpy as np
 from ..core import GradientTransformation, apply_updates
 from ..data.synthetic import CTRDataset, iterate_batches
 from ..models import ctr
+from ..models import embedding as embedding_lib
 from . import metrics
 
 
@@ -23,12 +24,20 @@ def make_train_step(cfg: ctr.CTRConfig, tx: GradientTransformation):
     """Returns jit'd (params, opt_state, batch) -> (params, opt_state, aux).
 
     The task loss is plain mean BCE; L2 enters through the optimizer
-    (coupled, paper-faithful), and CowClip's counts are computed here from
-    the batch ids with one segment-sum per field.
+    (coupled, paper-faithful), and CowClip's counts come from one unique-id
+    dedup per field. With ``cfg.sparse`` the forward runs through the
+    unique-id gather layer (grads w.r.t. embeddings materialize on gathered
+    rows and scatter back through the gather's backward) — same update
+    semantics as the dense forward, routed through the sparse layout.
     """
 
     def loss_fn(params, ids, dense, labels):
-        logits = ctr.apply(params, cfg, ids, dense)
+        if cfg.sparse:
+            uniq = ctr.unique_batch(cfg, ids)
+            rows = ctr.gather_embed_rows(params, uniq)
+            logits = ctr.apply_rows(rows, params["dense"], cfg, uniq, dense)
+        else:
+            logits = ctr.apply(params, cfg, ids, dense)
         return metrics.logloss(logits, labels), logits
 
     @partial(jax.jit, donate_argnums=(0, 1))
@@ -44,28 +53,58 @@ def make_train_step(cfg: ctr.CTRConfig, tx: GradientTransformation):
     return step
 
 
+def _is_uniq(x) -> bool:
+    return isinstance(x, embedding_lib.UniqueField)
+
+
+def _unzip3(tree_of_triples, like):
+    """Split a tree whose leaves are 3-tuples into three trees shaped
+    ``like`` (jax.tree.transpose over the shared embed-tree structure)."""
+    outer = jax.tree.structure(like)
+    inner = jax.tree.structure((0, 0, 0))
+    return jax.tree.transpose(outer, inner, tree_of_triples)
+
+
+def _uniq_tree(embed_params: dict, uniq: dict) -> dict:
+    """Broadcast the per-field dedup over every embedding group (fm and lin
+    tables of a field share ids, hence slots and counts)."""
+    return {g: {f: uniq[f] for f in tables}
+            for g, tables in embed_params.items()}
+
+
 def make_fused_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
-                          zeta: float = 1e-5, dense_tx=None):
+                          zeta: float = 1e-5, dense_tx=None,
+                          use_kernel: bool = True):
     """Train step that runs every embedding table through the fused Pallas
     CowClip+L2+Adam kernel (repro.kernels.cowclip) instead of the composable
     transform chain — the TPU fast path. Dense tower still goes through the
     substrate optimizer. State: {"step", "m", "v"} trees for embeddings +
     the dense transform state.
 
-    Equivalence with the substrate path is asserted in
-    tests/test_train_integration.py.
+    With ``cfg.sparse`` this routes to ``make_sparse_train_step`` (the
+    unique-id gather -> fused-update -> scatter path) and returns its full
+    ``(step, init, flush)`` triple — the sparse contract requires flushing
+    pending lazy decay before eval/checkpoint, so the flush is deliberately
+    not droppable (``step, init = ...`` unpacking fails loudly rather than
+    silently skipping it). The dense layout here is retained as the sparse
+    path's exactness oracle; equivalence of all paths is asserted in
+    tests/test_train_integration.py and tests/test_sparse_embedding.py.
     """
     from ..core import optim as optim_lib
     from ..kernels.cowclip import fused_cowclip_adam
+
+    if cfg.sparse:
+        return make_sparse_train_step(cfg, hp, r=r, zeta=zeta,
+                                      dense_tx=dense_tx,
+                                      use_kernel=use_kernel)
 
     if dense_tx is None:
         dense_tx = optim_lib.adam(hp.dense_lr, l2=hp.dense_l2)
 
     def init(params):
-        zeros = jax.tree.map(jnp.zeros_like, params["embed"])
         return {
             "step": jnp.zeros((), jnp.int32),
-            "m": zeros,
+            "m": jax.tree.map(jnp.zeros_like, params["embed"]),
             "v": jax.tree.map(jnp.zeros_like, params["embed"]),
             "dense": dense_tx.init(params["dense"]),
         }
@@ -81,20 +120,15 @@ def make_fused_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         counts = ctr.batch_counts(cfg, batch["ids"], params)
         t = state["step"] + 1
 
-        new_embed, new_m, new_v = {}, {}, {}
-        for group in params["embed"]:
-            new_embed[group], new_m[group], new_v[group] = {}, {}, {}
-            for name, w in params["embed"][group].items():
-                # 1-dim LR tables are CowClip-exempt but share the kernel
-                # (the kernel itself skips clipping when dim < 2).
-                wn, mn, vn = fused_cowclip_adam(
-                    w, grads["embed"][group][name], counts[group][name],
-                    state["m"][group][name], state["v"][group][name], t,
-                    r=r, zeta=zeta, lr=hp.emb_lr, l2=hp.emb_l2,
-                )
-                new_embed[group][name] = wn
-                new_m[group][name] = mn
-                new_v[group][name] = vn
+        # 1-dim LR tables are CowClip-exempt but share the kernel
+        # (the kernel itself skips clipping when dim < 2).
+        out = jax.tree.map(
+            lambda w, g, c, m, v: fused_cowclip_adam(
+                w, g, c, m, v, t, r=r, zeta=zeta,
+                lr=hp.emb_lr, l2=hp.emb_l2, use_kernel=use_kernel),
+            params["embed"], grads["embed"], counts, state["m"], state["v"],
+        )
+        new_embed, new_m, new_v = _unzip3(out, params["embed"])
 
         d_updates, d_state = dense_tx.update(
             grads["dense"], state["dense"], params["dense"])
@@ -105,6 +139,116 @@ def make_fused_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
             "loss": loss}
 
     return step, init
+
+
+def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
+                           zeta: float = 1e-5, dense_tx=None,
+                           use_kernel: bool = True, clip: bool = True,
+                           b1: float = 0.9, b2: float = 0.999,
+                           eps: float = 1e-8):
+    """The sparse unique-id train step: per step, each field's batch ids are
+    deduplicated once and the embedding update runs entirely on the
+    ``[n_unique, dim]`` gathered rows — gather -> lazy-L2-decay catch-up ->
+    forward/backward on rows -> CowClip -> Adam -> scatter. Update HBM
+    traffic is O(batch), not O(vocab).
+
+    Ids absent from a batch are not touched; their coupled-L2 decay accrues
+    in a per-row ``last_step`` array and is replayed on next touch (or by
+    ``flush``), keeping the path exactly equivalent to the dense one.
+
+    Returns ``(step, init, flush)``; ``flush(params, state)`` applies all
+    pending decay (needed before eval / checkpoint / comparing against the
+    dense path).
+    """
+    from ..core import optim as optim_lib
+    from ..kernels import cowclip as cc_kernels
+
+    if dense_tx is None:
+        dense_tx = optim_lib.adam(hp.dense_lr, l2=hp.dense_l2)
+    adam_kw = dict(lr=hp.emb_lr, l2=hp.emb_l2, b1=b1, b2=b2, eps=eps)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(jnp.zeros_like, params["embed"]),
+            "v": jax.tree.map(jnp.zeros_like, params["embed"]),
+            "last_step": jax.tree.map(
+                lambda t: jnp.zeros((t.shape[0],), jnp.int32),
+                params["embed"]),
+            "dense": dense_tx.init(params["dense"]),
+        }
+
+    def loss_fn(rows, dense_params, uniq, dense_feats, labels):
+        logits = ctr.apply_rows(rows, dense_params, cfg, uniq, dense_feats)
+        return metrics.logloss(logits, labels)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, state, batch):
+        t = state["step"] + 1
+        uniq = ctr.unique_batch(cfg, batch["ids"])
+        utree = _uniq_tree(params["embed"], uniq)
+
+        # gather + replay pending decay so the forward sees rows exactly as
+        # the dense path would at the start of step t
+        caught = jax.tree.map(
+            lambda u, w, m, v, ls: cc_kernels.sparse_gather_catchup(
+                w, m, v, ls, u.uids, u.counts, t,
+                use_kernel=use_kernel, **adam_kw),
+            utree, params["embed"], state["m"], state["v"],
+            state["last_step"], is_leaf=_is_uniq,
+        )
+        w_rows, m_rows, v_rows = _unzip3(caught, params["embed"])
+
+        loss, (g_rows, g_dense) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(
+            w_rows, params["dense"], uniq, batch["dense"], batch["labels"])
+
+        # CowClip -> coupled L2 -> Adam on the touched rows, scattered back;
+        # untouched rows keep accruing lazy decay via last_step
+        out = jax.tree.map(
+            lambda u, w, m, v, ls, wr, gr, mr, vr:
+            cc_kernels.sparse_update_scatter(
+                w, m, v, ls, u.uids, u.counts, wr, gr, mr, vr, t,
+                r=r, zeta=zeta, use_kernel=use_kernel, clip=clip,
+                **adam_kw),
+            utree, params["embed"], state["m"], state["v"],
+            state["last_step"], w_rows, g_rows, m_rows, v_rows,
+            is_leaf=_is_uniq,
+        )
+        outer = jax.tree.structure(params["embed"])
+        inner = jax.tree.structure((0, 0, 0, 0))
+        new_embed, new_m, new_v, new_ls = jax.tree.transpose(
+            outer, inner, out)
+        new_embed = jax.tree.map(
+            lambda w, p: w.astype(p.dtype), new_embed, params["embed"])
+
+        d_updates, d_state = dense_tx.update(
+            g_dense, state["dense"], params["dense"])
+        new_dense = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), params["dense"], d_updates)
+        new_state = {"step": t, "m": new_m, "v": new_v, "last_step": new_ls,
+                     "dense": d_state}
+        return {"embed": new_embed, "dense": new_dense}, new_state, {
+            "loss": loss}
+
+    @jax.jit
+    def flush(params, state):
+        """Apply every row's pending decay-only steps (through the current
+        step). After flush the (params, m, v) trees equal the dense path's."""
+        caught = jax.tree.map(
+            lambda w, m, v, ls: optim_lib.decay_catchup_rows(
+                w, m, v, ls, state["step"], **adam_kw),
+            params["embed"], state["m"], state["v"], state["last_step"],
+        )
+        new_embed, new_m, new_v = _unzip3(caught, params["embed"])
+        new_embed = jax.tree.map(
+            lambda w, p: w.astype(p.dtype), new_embed, params["embed"])
+        new_ls = jax.tree.map(
+            lambda ls: jnp.full_like(ls, state["step"]), state["last_step"])
+        new_state = dict(state, m=new_m, v=new_v, last_step=new_ls)
+        return dict(params, embed=new_embed), new_state
+
+    return step, init, flush
 
 
 def make_eval_fn(cfg: ctr.CTRConfig):
@@ -138,7 +282,7 @@ class TrainResult:
 
 def train_ctr(
     cfg: ctr.CTRConfig,
-    tx: GradientTransformation,
+    tx: Optional[GradientTransformation],
     train_ds: CTRDataset,
     test_ds: Optional[CTRDataset],
     *,
@@ -147,10 +291,21 @@ def train_ctr(
     seed: int = 0,
     eval_every_epoch: bool = True,
     log_fn: Optional[Callable[[str], None]] = None,
+    step_bundle=None,
 ) -> TrainResult:
+    """Epoch driver. By default steps through the composable-optimizer path
+    (``tx``); pass a ``core.builders.TrainStepBundle`` (e.g. the sparse
+    unique-id path) to drive an explicit (step, init, flush) triple instead
+    — ``flush`` runs before every eval so lazily-decayed params are exact.
+    """
     params = ctr.init(jax.random.key(seed), cfg)
-    opt_state = tx.init(params)
-    step_fn = make_train_step(cfg, tx)
+    if step_bundle is not None:
+        step_fn, opt_state, flush = (
+            step_bundle.step, step_bundle.init(params), step_bundle.flush)
+    else:
+        opt_state = tx.init(params)
+        step_fn = make_train_step(cfg, tx)
+        flush = None
     eval_fn = make_eval_fn(cfg)
 
     history = []
@@ -162,6 +317,8 @@ def train_ctr(
             params, opt_state, aux = step_fn(params, opt_state, batch)
             n_steps += 1
         if eval_every_epoch and test_ds is not None:
+            if flush is not None:
+                params, opt_state = flush(params, opt_state)
             ev = eval_fn(params, test_ds)
             history.append({"epoch": epoch, **ev})
             if log_fn:
@@ -169,6 +326,8 @@ def train_ctr(
                     f"epoch {epoch}: auc={ev['auc']:.4f} logloss={ev['logloss']:.4f}"
                 )
     seconds = time.perf_counter() - t0
+    if flush is not None:
+        params, opt_state = flush(params, opt_state)
     final = (
         history[-1]
         if history

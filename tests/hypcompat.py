@@ -1,0 +1,110 @@
+"""Fallback shim for ``hypothesis`` so tier-1 runs without it installed.
+
+The container does not ship hypothesis; importing it at module scope used to
+kill ``pytest -x`` at collection. Test modules import through this shim::
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+        import hypothesis.extra.numpy as hnp
+    except ImportError:
+        from hypcompat import hypothesis, st, hnp
+
+When hypothesis is present the real library is used unchanged. When absent,
+``@hypothesis.given`` degrades to a deterministic sweep of ``max_examples``
+seeded draws from the same strategy specs — plain parametrized cases rather
+than adversarial search, but the invariants still execute.
+"""
+
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+try:  # pragma: no cover - exercised only when hypothesis exists
+    import hypothesis as _real_hyp
+    import hypothesis.strategies as _real_st
+    import hypothesis.extra.numpy as _real_hnp
+
+    hypothesis = _real_hyp
+    st = _real_st
+    hnp = _real_hnp
+except ImportError:
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        def sample(self, rng, shape=None):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng, shape=None):
+            out = rng.integers(self.lo, self.hi + 1, size=shape)
+            return int(out) if shape is None else out
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng, shape=None):
+            out = rng.uniform(self.lo, self.hi, size=shape)
+            return float(out) if shape is None else out
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def sample(self, rng, shape=None):
+            if shape is None:
+                return self.seq[int(rng.integers(len(self.seq)))]
+            idx = rng.integers(len(self.seq), size=shape)
+            return np.asarray(self.seq)[idx]
+
+    class _Arrays(_Strategy):
+        def __init__(self, dtype, shape, elements):
+            self.dtype, self.shape, self.elements = dtype, shape, elements
+
+        def sample(self, rng, shape=None):
+            del shape
+            return np.asarray(
+                self.elements.sample(rng, shape=self.shape), self.dtype
+            )
+
+    def _given(**strategies):
+        def deco(fn):
+            n = getattr(fn, "_hypcompat_max_examples", _DEFAULT_EXAMPLES)
+
+            def wrapper(*args, **kwargs):
+                # crc32, not hash(): str hashing is salted per process and
+                # would make the "deterministic" sweep differ across runs
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def _settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._hypcompat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    hypothesis = types.SimpleNamespace(given=_given, settings=_settings)
+    st = types.SimpleNamespace(
+        integers=_Integers,
+        floats=lambda lo, hi, **kw: _Floats(lo, hi),
+        sampled_from=_SampledFrom,
+    )
+    hnp = types.SimpleNamespace(arrays=_Arrays)

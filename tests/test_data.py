@@ -90,6 +90,26 @@ def test_criteo_loader_roundtrip(tmp_path):
     np.testing.assert_array_equal(ds.ids, ds2.ids)
 
 
+def test_criteo_hash_pinned_and_vectorized():
+    """Hash values are load-bearing (stored datasets reference them): pin
+    the scalar FNV-1a definition and require the vectorized column hash to
+    agree with it bit-for-bit."""
+    from repro.data.criteo import _hash_token, hash_tokens
+
+    # pinned FNV-1a(field:token) % vocab values — must never change
+    assert _hash_token(0, "deadbeef", 100_000) == 60471
+    assert _hash_token(3, "<missing>", 100_000) == 77462
+    assert _hash_token(25, "0004c67c", 100_000) == 12249
+
+    rng = np.random.default_rng(7)
+    toks = [f"{rng.integers(0, 16**8):08x}" for _ in range(500)]
+    toks += ["<missing>", "", "a", "deadbeef", "0" * 16]
+    for field in (0, 11, 25):
+        vec = hash_tokens(field, toks, 997)
+        ref = np.array([_hash_token(field, t, 997) for t in toks])
+        np.testing.assert_array_equal(vec, ref)
+
+
 def test_criteo_loader_rejects_malformed(tmp_path):
     p = tmp_path / "bad.tsv"
     p.write_text("1\t2\t3\n")

@@ -58,6 +58,8 @@ with mesh:
     lowered = fn.lower(params, opt, batch)
 compiled = lowered.compile()
 cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):       # jax 0.4.x: one dict per program
+    cost = cost[0] if cost else {{}}
 mem = compiled.memory_analysis()
 
 # decode too

@@ -1,8 +1,11 @@
 """MoE dispatch invariants (hypothesis property tests on the sort/gather
 formulation) + HLO collective-parser unit tests."""
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # fall back to deterministic parametrized sweeps
+    from hypcompat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

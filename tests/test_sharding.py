@@ -12,8 +12,15 @@ from repro.core import build_optimizer, scale_hyperparams
 from repro.models import lm
 from repro.sharding.specs import cache_spec, param_spec, _paths_tree
 
-MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
-MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)            # jax >= 0.5 signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # 0.4.x: ((name, n),)
+
+
+MESH_1POD = _abstract_mesh((16, 16), ("data", "model"))
+MESH_2POD = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, axis):
