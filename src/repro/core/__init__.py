@@ -2,9 +2,11 @@
 substrate (built from scratch; optax is not available offline)."""
 
 from .builders import (
+    TRAIN_PATHS,
     TrainStepBundle,
     build_optimizer,
     build_train_step,
+    dense_tower_tx,
     label_params,
     two_group,
 )

@@ -69,6 +69,30 @@ def two_group(
     return optim.GradientTransformation(init_fn, update_fn)
 
 
+def dense_tower_tx(
+    hp: Hyperparams,
+    *,
+    warmup_steps: int = 0,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> optim.GradientTransformation:
+    """The dense tower's chain (optional coupled L2 -> Adam -> linear-warmup
+    LR) — identical across every embedding placement, so every bundle builds
+    it here."""
+    steps = []
+    if hp.dense_l2:
+        steps.append(optim.add_decayed_weights(hp.dense_l2))
+    steps.append(optim.scale_by_adam(b1=b1, b2=b2, eps=eps))
+    dense_lr = (
+        schedules.linear_warmup(hp.dense_lr, warmup_steps)
+        if warmup_steps
+        else hp.dense_lr
+    )
+    steps.append(optim.scale_by_neg_lr(dense_lr))
+    return optim.chain(*steps)
+
+
 def build_optimizer(
     hp: Hyperparams,
     *,
@@ -98,36 +122,46 @@ def build_optimizer(
     embed_steps.append(optim.scale_by_neg_lr(hp.emb_lr))
     embed_tx = optim.chain(*embed_steps)
 
-    dense_steps = []
-    if hp.dense_l2:
-        dense_steps.append(optim.add_decayed_weights(hp.dense_l2))
-    dense_steps.append(optim.scale_by_adam(b1=b1, b2=b2, eps=eps))
-    dense_lr = (
-        schedules.linear_warmup(hp.dense_lr, warmup_steps)
-        if warmup_steps
-        else hp.dense_lr
-    )
-    dense_steps.append(optim.scale_by_neg_lr(dense_lr))
-    dense_tx = optim.chain(*dense_steps)
-
+    dense_tx = dense_tower_tx(hp, warmup_steps=warmup_steps, b1=b1, b2=b2,
+                              eps=eps)
     return two_group(embed_tx, dense_tx)
 
 
-class TrainStepBundle(NamedTuple):
-    """A train-step triple usable by ``train.loop.train_ctr``.
+def identity_prepare(params):
+    """Default param placement: leave the tree exactly as initialized."""
+    return params
 
-    step:  jit'd (params, state, batch) -> (params, state, aux)
-    init:  params -> state
-    flush: (params, state) -> (params, state); applies any deferred work
-           (the sparse path's pending lazy-L2 decay) — identity elsewhere.
+
+def identity_flush(params, state):
+    """Default flush: nothing deferred, nothing to settle."""
+    return params, state
+
+
+class TrainStepBundle(NamedTuple):
+    """A train-step bundle usable by ``train.loop.train_ctr``.
+
+    step:    jit'd (params, state, batch) -> (params, state, aux)
+    init:    params -> state (call on *prepared* params)
+    flush:   (params, state) -> (params, state); applies any deferred work
+             (the sparse path's pending lazy-L2 decay) — identity elsewhere,
+             and idempotent everywhere.
+    prepare: params -> params; placement-specific layout applied once before
+             ``init`` (the sharded path pads tables and device_puts rows
+             over the mesh's "model" axis) — identity elsewhere.
+    export:  params -> params; inverse of ``prepare``'s layout change
+             (the sharded path strips pad rows back to [vocab, dim]), so
+             checkpoints are placement-independent — identity elsewhere.
+             Export a *flushed* params tree.
     """
 
     step: Callable
     init: Callable
     flush: Callable
+    prepare: Callable = identity_prepare
+    export: Callable = identity_prepare
 
 
-TRAIN_PATHS = ("substrate", "fused", "sparse")
+TRAIN_PATHS = ("substrate", "fused", "sparse", "sharded")
 
 
 def build_train_step(
@@ -144,63 +178,33 @@ def build_train_step(
     b2: float = 0.999,
     eps: float = 1e-8,
     use_kernel: Optional[bool] = None,
+    mesh=None,
+    partition: str = "div",
 ) -> TrainStepBundle:
-    """Route a CTR train step through one of the three update paths.
+    """Route a CTR train step through one of the four update paths, all
+    served by the ``repro.embed.EmbeddingStore`` placements:
 
-      substrate : composable GradientTransformation chain (the oracle)
-      fused     : dense fused Pallas CowClip+L2+Adam kernel per table
+      substrate : composable GradientTransformation chain (the oracle);
+                  dense placement
+      fused     : dense fused Pallas CowClip+L2+Adam kernel per table;
+                  dense placement
       sparse    : unique-id gather -> fused row update -> scatter, with
                   lazy L2 decay (O(batch) update traffic)
+      sharded   : tables row-sharded over mesh axis "model", batch over
+                  "data", shard_map step (``mesh``/``partition`` apply;
+                  mesh=None uses every local device as (1, n))
 
-    ``path=None`` honors the config knob: ``cfg.sparse`` selects "sparse",
-    otherwise "substrate". ``use_kernel=None`` compiles the Pallas kernels
-    on TPU and runs the identical jnp reference elsewhere (interpret-mode
-    kernels are a correctness harness, far too slow for CPU training). The
-    dense tower always runs the substrate Adam (with optional warmup).
+    ``path=None`` honors the config knobs: ``cfg.placement`` if set, else
+    ``cfg.sparse`` selects "sparse", otherwise "substrate".
+    ``use_kernel=None`` compiles the Pallas kernels on TPU and runs the
+    identical jnp reference elsewhere (interpret-mode kernels are a
+    correctness harness, far too slow for CPU training). The dense tower
+    always runs the substrate Adam (with optional warmup).
     """
-    from ..train import loop as loop_lib  # deferred: train imports core
+    from ..embed.store import store_for  # deferred: embed imports core
 
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-
-    if path is None:
-        path = "sparse" if getattr(cfg, "sparse", False) else "substrate"
-    if path not in TRAIN_PATHS:
-        raise ValueError(f"unknown path {path!r}; expected one of {TRAIN_PATHS}")
-    if path == "fused" and getattr(cfg, "sparse", False):
-        # the fused entry point honors the knob and would delegate anyway;
-        # route here so the bundle carries the sparse flush
-        path = "sparse"
-
-    if path == "substrate":
-        tx = build_optimizer(hp, clip_kind=clip_kind, r=r, zeta=zeta,
-                             clip_t=clip_t, warmup_steps=warmup_steps,
-                             b1=b1, b2=b2, eps=eps)
-        step = loop_lib.make_train_step(cfg, tx)
-        return TrainStepBundle(step, tx.init, lambda p, s: (p, s))
-
-    dense_steps = []
-    if hp.dense_l2:
-        dense_steps.append(optim.add_decayed_weights(hp.dense_l2))
-    dense_steps.append(optim.scale_by_adam(b1=b1, b2=b2, eps=eps))
-    dense_lr = (
-        schedules.linear_warmup(hp.dense_lr, warmup_steps)
-        if warmup_steps else hp.dense_lr
-    )
-    dense_steps.append(optim.scale_by_neg_lr(dense_lr))
-    dense_tx = optim.chain(*dense_steps)
-
-    if path == "fused":
-        step, init = loop_lib.make_fused_train_step(
-            cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx,
-            use_kernel=use_kernel)
-        return TrainStepBundle(step, init, lambda p, s: (p, s))
-
-    if clip_kind not in ("adaptive_column", "none"):
-        raise ValueError(
-            f"sparse path supports clip_kind 'adaptive_column' or 'none', "
-            f"got {clip_kind!r} (ablation clips are substrate-only)")
-    step, init, flush = loop_lib.make_sparse_train_step(
-        cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx, use_kernel=use_kernel,
-        clip=clip_kind == "adaptive_column", b1=b1, b2=b2, eps=eps)
-    return TrainStepBundle(step, init, flush)
+    store = store_for(cfg, path=path, mesh=mesh, partition=partition)
+    return store.make_bundle(
+        cfg, hp, clip_kind=clip_kind, r=r, zeta=zeta, clip_t=clip_t,
+        warmup_steps=warmup_steps, b1=b1, b2=b2, eps=eps,
+        use_kernel=use_kernel)

@@ -1,0 +1,9 @@
+"""repro.embed — the EmbeddingStore abstraction.
+
+One facade (``store.EmbeddingStore``) over the three embedding placements
+(dense, sparse unique-id, mesh-sharded), each yielding the same
+``TrainStepBundle`` contract; ``sharded`` carries the row-shard plans and
+``shard_map`` building blocks (``sharded.RowShardPlan``)."""
+
+from .sharded import RowShardPlan, default_mesh, make_plans
+from .store import PLACEMENTS, EmbeddingStore, resolve_path, store_for

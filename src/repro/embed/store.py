@@ -1,0 +1,176 @@
+"""EmbeddingStore: one facade over the three embedding placements.
+
+The embedding tables are 99.9% of a CTR model's parameters (paper Table 1),
+and every scaling decision in this repo is a decision about where those
+rows live and how their optimizer update runs:
+
+* ``dense``   — full [vocab, dim] tables on one device; the update streams
+                the whole table every step (O(vocab)). Exactness oracle.
+                ``kernel="substrate"`` runs the composable
+                GradientTransformation chain, ``kernel="fused"`` the fused
+                Pallas CowClip+L2+Adam kernel per table.
+* ``sparse``  — unique-id gather -> fused row update -> scatter with lazy
+                L2 decay (O(batch) update traffic). One device, vocab-bound
+                memory but batch-bound compute.
+* ``sharded`` — tables row-sharded over the mesh's ``"model"`` axis, batch
+                split over ``"data"``, via ``shard_map`` (repro.embed.sharded).
+                Per-device table memory and update cost drop by the model-axis
+                size; CowClip keeps the embedding update collective-free.
+
+Which to pick: dense until the table update dominates the step (vocab around
+10^6 at CTR batch sizes), sparse while one device still holds the tables,
+sharded when it no longer does (Criteo-scale 10^8 rows and beyond).
+
+Every placement yields the same ``TrainStepBundle`` contract consumed by
+``train.loop.train_ctr``::
+
+    bundle = store_for(cfg, path=..., mesh=...).make_bundle(cfg, hp, ...)
+    params = bundle.prepare(params)        # placement-specific layout
+    state  = bundle.init(params)
+    params, state, aux = bundle.step(params, state, batch)
+    params, state = bundle.flush(params, state)   # before eval/checkpoint
+    canonical = bundle.export(params)      # placement-independent params
+
+``prepare`` is where placement lives: identity for dense/sparse, pad-and-
+device_put (rows over "model") for sharded; ``export`` is its layout
+inverse, so checkpoints interchange across placements. ``flush`` settles
+deferred work (the sparse path's pending lazy decay); it is idempotent
+everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+from ..core import builders
+from ..core.builders import TRAIN_PATHS, TrainStepBundle
+
+PLACEMENTS = ("dense", "sparse", "sharded")
+
+# core.build_train_step path name (TRAIN_PATHS) -> (placement, dense kernel)
+_PATH_TO_STORE = {
+    "substrate": ("dense", "substrate"),
+    "fused": ("dense", "fused"),
+    "sparse": ("sparse", "auto"),
+    "sharded": ("sharded", "auto"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingStore:
+    """A chosen placement plus its placement-specific knobs."""
+
+    placement: str = "dense"
+    kernel: str = "substrate"     # dense only: "substrate" | "fused"
+    mesh: Any = None              # sharded only; None -> all local devices
+    partition: str = "div"        # sharded only: "div" | "mod" row mapping
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {self.placement!r}; "
+                             f"expected one of {PLACEMENTS}")
+
+    def describe(self) -> str:
+        if self.placement == "sharded":
+            from . import sharded as shard_lib
+            mesh = self.mesh if self.mesh is not None else shard_lib.default_mesh()
+            return (f"sharded(rows over model={mesh.shape['model']}, "
+                    f"batch over data={mesh.shape['data']}, "
+                    f"{self.partition} partition)")
+        if self.placement == "dense":
+            return f"dense({self.kernel})"
+        return self.placement
+
+    def make_bundle(
+        self,
+        cfg,
+        hp,
+        *,
+        clip_kind: str = "adaptive_column",
+        r: float = 1.0,
+        zeta: float = 1e-5,
+        clip_t: float = 1.0,
+        warmup_steps: int = 0,
+        b1: float = 0.9,
+        b2: float = 0.999,
+        eps: float = 1e-8,
+        use_kernel: Optional[bool] = None,
+    ) -> TrainStepBundle:
+        """Build this placement's (step, init, flush, prepare) bundle."""
+        from ..train import loop as loop_lib  # deferred: train imports core
+
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+
+        if self.placement == "dense" and self.kernel != "fused":
+            tx = builders.build_optimizer(
+                hp, clip_kind=clip_kind, r=r, zeta=zeta, clip_t=clip_t,
+                warmup_steps=warmup_steps, b1=b1, b2=b2, eps=eps)
+            step = loop_lib.make_train_step(cfg, tx)
+            return TrainStepBundle(step, tx.init, builders.identity_flush)
+
+        dense_tx = builders.dense_tower_tx(
+            hp, warmup_steps=warmup_steps, b1=b1, b2=b2, eps=eps)
+
+        if self.placement == "dense":   # fused kernel
+            step, init = loop_lib.make_fused_train_step(
+                cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx,
+                use_kernel=use_kernel)
+            return TrainStepBundle(step, init, builders.identity_flush)
+
+        if clip_kind not in ("adaptive_column", "none"):
+            raise ValueError(
+                f"{self.placement} placement supports clip_kind "
+                f"'adaptive_column' or 'none', got {clip_kind!r} "
+                f"(ablation clips are substrate-only)")
+
+        if self.placement == "sparse":
+            step, init, flush = loop_lib.make_sparse_train_step(
+                cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx,
+                use_kernel=use_kernel, clip=clip_kind == "adaptive_column",
+                b1=b1, b2=b2, eps=eps)
+            return TrainStepBundle(step, init, flush)
+
+        # sharded
+        from . import sharded as shard_lib
+
+        mesh = self.mesh if self.mesh is not None else shard_lib.default_mesh()
+        step, init, flush, prepare, export = loop_lib.make_sharded_train_step(
+            cfg, hp, mesh, scheme=self.partition, r=r, zeta=zeta,
+            dense_tx=dense_tx, clip=clip_kind == "adaptive_column",
+            b1=b1, b2=b2, eps=eps)
+        return TrainStepBundle(step, init, flush, prepare, export)
+
+
+def resolve_path(cfg, path: Optional[str] = None) -> str:
+    """Resolution order: explicit path > cfg.placement > cfg.sparse knob."""
+    if path is None:
+        path = getattr(cfg, "placement", None)
+    if path is None:
+        path = "sparse" if getattr(cfg, "sparse", False) else "substrate"
+    if path not in TRAIN_PATHS:
+        raise ValueError(
+            f"unknown path {path!r}; expected one of {TRAIN_PATHS}")
+    return path
+
+
+def store_for(
+    cfg,
+    *,
+    path: Optional[str] = None,
+    mesh: Any = None,
+    partition: str = "div",
+) -> EmbeddingStore:
+    """The store for a config: routes legacy path names and the config's
+    ``placement``/``sparse`` knobs onto one of the three placements."""
+    path = resolve_path(cfg, path)
+    placement, kernel = _PATH_TO_STORE[path]
+    if placement == "dense" and kernel == "fused" and getattr(cfg, "sparse", False):
+        # the fused entry point honors the knob and would delegate anyway;
+        # route here so the bundle carries the sparse flush
+        placement, kernel = "sparse", "auto"
+    return EmbeddingStore(placement=placement, kernel=kernel, mesh=mesh,
+                          partition=partition)

@@ -27,6 +27,58 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def force_host_device_count(n: int) -> None:
+    """Ask XLA for ``n`` virtual host devices via XLA_FLAGS.
+
+    Must run before the first jax backend touch (first array op or device
+    query) — importing jax alone is fine. XLA honors the LAST occurrence of
+    a flag, so any existing device-count setting is stripped rather than
+    prepended to (prepending would silently lose to the old value).
+    """
+    import os
+    import re
+
+    kept = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                  os.environ.get("XLA_FLAGS", ""))
+    os.environ["XLA_FLAGS"] = (
+        f"{kept} --xla_force_host_platform_device_count={n}").strip()
+
+
+def parse_mesh(spec: str) -> tuple:
+    """Parse a ``--mesh`` flag: "2,4" or "2x4" -> (data=2, model=4)."""
+    parts = spec.replace("x", ",").split(",")
+    if len(parts) != 2:
+        raise ValueError(
+            f"--mesh wants DATA,MODEL (e.g. '2,4'), got {spec!r}")
+    data, model = (int(p) for p in parts)
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    return data, model
+
+
+def make_ctr_mesh(data: int = 0, model: int = 0):
+    """("data", "model") mesh for the sharded CTR placement.
+
+    Unset axes are filled from the local device count, favoring the model
+    axis (table rows are what CTR scaling runs out of): ``(0, 0)`` becomes
+    (1, n_devices). On the CPU container, virtual devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before jax
+    initializes (``repro.launch.train --host-devices N`` does this).
+    """
+    n = jax.device_count()
+    if data < 1 and model < 1:
+        data, model = 1, n
+    elif data < 1:
+        data = max(1, n // model)
+    elif model < 1:
+        model = max(1, n // data)
+    if data * model > n:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {data * model} devices, have {n} "
+            f"(on CPU pass --host-devices {data * model})")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 # v5e hardware constants used by the roofline (EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip

@@ -14,6 +14,9 @@ Two families:
 Usage:
   PYTHONPATH=src python -m repro.launch.train --task ctr --model deepfm \
       --batch 8192 --epochs 2 --rule cowclip
+  # mesh-sharded embeddings on 8 virtual CPU devices (2-way data, 4-way row):
+  PYTHONPATH=src python -m repro.launch.train --task ctr --placement sharded \
+      --mesh 2,4 --host-devices 8 --batch 8192 --epochs 1
   PYTHONPATH=src python -m repro.launch.train --task lm --arch gemma3-12b \
       --reduced --steps 100
 """
@@ -29,14 +32,16 @@ import numpy as np
 
 from ..configs import get_config, reduce_config
 from ..core import apply_updates, build_optimizer, scale_hyperparams
-from ..data import make_ctr_dataset, make_lm_tokens, iterate_batches, load_criteo_tsv
+from ..data import make_ctr_dataset, make_lm_tokens, load_criteo_tsv
 from ..models import ctr as ctr_lib, embedding, lm
-from ..sharding.specs import infer_param_shardings
-from ..train import checkpoint, metrics, train_ctr
-from .mesh import make_host_mesh
+from ..train import checkpoint, train_ctr
+from . import mesh as mesh_lib
+from .mesh import make_ctr_mesh, parse_mesh
 
 
 def run_ctr(args) -> None:
+    from ..embed import store_for
+
     if args.criteo:
         ds = load_criteo_tsv(args.criteo, max_rows=args.max_rows)
     else:
@@ -45,18 +50,25 @@ def run_ctr(args) -> None:
         ds = make_ctr_dataset(args.samples, vocabs, n_dense=4, zipf_a=1.1,
                               seed=args.seed)
     tr, te = ds.split(0.9)
+    placement = args.placement or ("sparse" if args.sparse else None)
     cfg = ctr_lib.CTRConfig(
         name=args.model, vocab_sizes=ds.vocab_sizes,
         n_dense=ds.dense.shape[1], emb_dim=args.emb_dim,
         mlp_dims=(args.mlp_dim,) * 3, emb_sigma=1e-2,
-        sparse=args.sparse, unique_capacity=args.unique_capacity,
+        sparse=placement == "sparse", unique_capacity=args.unique_capacity,
+        placement=placement,
     )
+    mesh = None
+    if placement == "sharded":
+        mesh = make_ctr_mesh(*(parse_mesh(args.mesh) if args.mesh else (0, 0)))
     n_params = sum(
         int(np.prod(x.shape)) for x in jax.tree.leaves(
             jax.eval_shape(lambda: ctr_lib.init(jax.random.key(0), cfg)))
     )
+    store = store_for(cfg, mesh=mesh, partition=args.partition)
     print(f"[train] {args.model}: {n_params/1e6:.1f}M params "
-          f"({len(tr)} train rows, batch {args.batch}, rule {args.rule})")
+          f"({len(tr)} train rows, batch {args.batch}, rule {args.rule}, "
+          f"embedding store {store.describe()})")
 
     hp = scale_hyperparams(
         args.rule, base_lr=args.base_lr, base_l2=args.base_l2,
@@ -65,32 +77,32 @@ def run_ctr(args) -> None:
     )
     clip = "adaptive_column" if args.rule == "cowclip" else "none"
     warmup = max(1, len(tr) // args.batch)
-    if cfg.sparse:
-        from ..core import build_train_step
-
-        bundle = build_train_step(cfg, hp, clip_kind=clip, zeta=args.zeta,
-                                  warmup_steps=warmup)
-        tx = None
-    else:
-        bundle = None
-        tx = build_optimizer(hp, clip_kind=clip, zeta=args.zeta,
-                             warmup_steps=warmup)
-    res = train_ctr(cfg, tx, tr, te, batch_size=args.batch,
+    # every placement goes through the one EmbeddingStore bundle interface
+    bundle = store.make_bundle(cfg, hp, clip_kind=clip, zeta=args.zeta,
+                               warmup_steps=warmup)
+    res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
                     epochs=args.epochs, seed=args.seed, log_fn=print,
                     step_bundle=bundle)
     print(f"[train] done: {res.steps} steps in {res.seconds:.1f}s "
           f"-> AUC {100*res.final_eval['auc']:.2f} "
           f"logloss {res.final_eval['logloss']:.4f}")
     if args.checkpoint:
-        # re-run one init to hold final params? train_ctr returns metrics only;
-        # checkpointing of params happens inside long-running jobs via
-        # repro.train.checkpoint — exposed here for the example flow.
-        print(f"[train] metrics checkpointed to {args.checkpoint}")
-        checkpoint.save(args.checkpoint, {"final_eval": jnp.asarray(
-            [res.final_eval["auc"], res.final_eval["logloss"]])})
+        # export strips placement-specific layout (the sharded path's pad
+        # rows) so the checkpoint restores against a fresh ctr.init template
+        # under any placement
+        checkpoint.save(args.checkpoint, {
+            "params": bundle.export(res.params),
+            "final_eval": {k: jnp.asarray(v)
+                           for k, v in res.final_eval.items()
+                           if k in ("auc", "logloss")},
+        })
+        print(f"[train] final params checkpointed to {args.checkpoint}")
 
 
 def run_lm(args) -> None:
+    from ..sharding.specs import infer_param_shardings
+    from .mesh import make_host_mesh
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
@@ -170,12 +182,27 @@ def main():
     ap.add_argument("--base-lr", type=float, default=2e-2)
     ap.add_argument("--base-l2", type=float, default=1e-5)
     ap.add_argument("--zeta", type=float, default=1e-5)
+    ap.add_argument("--placement", default=None,
+                    choices=("substrate", "fused", "sparse", "sharded"),
+                    help="embedding store placement (repro.embed); default "
+                         "substrate, or sparse when --sparse is set")
     ap.add_argument("--sparse", action="store_true",
-                    help="unique-id embedding update path (gather -> fused "
-                         "CowClip/L2/Adam -> scatter, lazy L2 decay)")
+                    help="shorthand for --placement sparse (unique-id gather "
+                         "-> fused CowClip/L2/Adam -> scatter, lazy L2 decay)")
     ap.add_argument("--unique-capacity", type=int, default=0,
                     help="padded per-field unique-id capacity; 0 = exact "
                          "min(batch, vocab) default")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="mesh axes for --placement sharded, e.g. '2,4' = "
+                         "2-way batch split x 4-way table row-sharding; "
+                         "default (1, n_devices)")
+    ap.add_argument("--partition", default="div", choices=("div", "mod"),
+                    help="sharded row mapping: div = contiguous blocks, "
+                         "mod = round-robin (balances Zipf-hot low ids)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="simulate N CPU devices (sets XLA_FLAGS; must act "
+                         "before jax initializes, so it is handled first "
+                         "thing in main)")
     ap.add_argument("--epochs", type=int, default=10)
     # lm
     ap.add_argument("--arch", default="gemma3-12b")
@@ -186,6 +213,17 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
+
+    if args.host_devices:
+        # must land before the first jax backend touch (nothing above this
+        # point creates arrays or queries devices — imports alone don't)
+        mesh_lib.force_host_device_count(args.host_devices)
+        if jax.device_count() < args.host_devices:
+            raise SystemExit(
+                "[train] --host-devices was set after jax initialized in "
+                "this process; set XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={args.host_devices} in the environment "
+                "instead")
 
     if args.task == "ctr":
         run_ctr(args)

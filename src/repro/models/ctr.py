@@ -40,6 +40,10 @@ class CTRConfig:
     # default min(batch, vocab_f). Smaller values bound memory but drop
     # gradient contributions on overflow (see models/embedding.py).
     unique_capacity: int = 0
+    # Embedding placement (repro.embed.EmbeddingStore): one of
+    # core.TRAIN_PATHS ("substrate" | "fused" | "sparse" | "sharded").
+    # None defers to the legacy ``sparse`` knob above.
+    placement: str | None = None
 
     @property
     def n_fields(self) -> int:

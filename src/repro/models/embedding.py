@@ -8,6 +8,10 @@ Table 1). Layout decisions:
 * Forward lookup is ``jnp.take`` (gather); under pjit with row-sharded tables
   XLA partitions this into the standard all-gather-free dynamic-slice +
   all-reduce pattern.
+* This module is the single-device substrate. Where tables *live* — dense,
+  unique-id sparse, or row-sharded over a mesh — is the EmbeddingStore's
+  decision (``repro.embed``); the explicit per-shard lookup/update math for
+  the sharded placement is in ``repro.embed.sharded``.
 
 Sparse unique-id layer
 ----------------------

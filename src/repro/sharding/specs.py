@@ -16,6 +16,11 @@ Strategy (DESIGN.md §6):
   (mu/nu) state — they share tree paths — plus decode caches.
 
 The "pod" axis is folded into batch/FSDP meshes via ``("pod","data")``.
+
+CTR models get their own engine (``ctr_param_spec`` /
+``infer_ctr_param_shardings``): row-shard the field tables over "model"
+only, replicate the small dense tower — the placement the sharded
+EmbeddingStore (repro.embed) actually applies in its ``prepare``.
 """
 
 from __future__ import annotations
@@ -203,11 +208,42 @@ def _paths_tree(tree):
     return jax.tree_util.tree_unflatten(treedef, [pstr(p) for p, _ in paths_leaves])
 
 
+def ctr_param_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for one CTR param/grad/Adam-moment leaf.
+
+    The CTR placement is not the LM one: embedding tables are 99.9% of the
+    params, so they row-shard over "model" ONLY (replicated over "data" —
+    the sharded train step psums per-shard row grads over "data", which
+    requires every data slice to hold the same shard), while the ~0.5M dense
+    tower replicates outright (Megatron-splitting a 400-wide MLP buys
+    nothing and costs an all-reduce per layer). Applies to params, grads and
+    Adam moments alike — they share tree paths. Tables whose rows don't
+    divide the model axis fall back to replicated; the sharded placement
+    pads tables to ``RowShardPlan.padded_vocab`` first so the row rule
+    always fits.
+    """
+    name = path.split("/")[-1]
+    if re.match(r"field_\d+$", name) and len(shape) == 2:
+        return pick(shape, [("model", None), (None, None)], mesh)
+    return P(*([None] * len(shape)))
+
+
 def infer_param_shardings(tree, mesh: Mesh):
     """NamedSharding tree for params / grads / optimizer states."""
     paths = _paths_tree(tree)
     return jax.tree.map(
         lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf.shape, mesh)),
+        paths,
+        tree,
+    )
+
+
+def infer_ctr_param_shardings(tree, mesh: Mesh):
+    """NamedSharding tree for CTR params / optimizer state (ctr_param_spec)."""
+    paths = _paths_tree(tree)
+    return jax.tree.map(
+        lambda path, leaf: NamedSharding(
+            mesh, ctr_param_spec(path, leaf.shape, mesh)),
         paths,
         tree,
     )

@@ -251,6 +251,169 @@ def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
     return step, init, flush
 
 
+def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
+                            scheme: str = "div", r: float = 1.0,
+                            zeta: float = 1e-5, dense_tx=None,
+                            clip: bool = True, b1: float = 0.9,
+                            b2: float = 0.999, eps: float = 1e-8):
+    """The mesh-parallel train step: embedding tables row-sharded over the
+    mesh's ``"model"`` axis, batch split over ``"data"``, dense tower
+    replicated — one ``shard_map`` per step (repro.embed.sharded holds the
+    per-shard building blocks).
+
+    Per device: masked local lookup of owned ids (+``psum`` over "model" to
+    assemble the full embedding), forward/backward of the tower on the local
+    batch slice, then the embedding cotangent is scattered onto local rows
+    and ``psum``'d over "data" together with CowClip's per-id counts. The
+    optimizer update itself (CowClip -> coupled L2 -> Adam) is row-local and
+    therefore collective-free — the paper-technique-aligned property that
+    makes row sharding the right CTR placement. Dense-tower grads ``psum``
+    over "data" and go through the substrate chain, replicated.
+
+    Returns ``(step, init, flush, prepare, export)``: ``prepare`` pads each
+    table to ``rows_per_shard * n_shards`` rows (zero pad rows stay exactly
+    zero: zero grad, zero count, and coupled-L2 decay of a zero row is zero)
+    and device_puts rows over "model" via ``sharding.specs.ctr_param_spec``;
+    ``export`` strips the pad rows back off for placement-independent
+    checkpoints; ``flush`` is the identity (nothing deferred — absent ids
+    decay eagerly on their shard every step, exactly like the dense path).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from ..core import builders as builders_lib
+    from ..embed import sharded as shard_lib
+    from ..sharding.specs import infer_ctr_param_shardings
+
+    if dense_tx is None:
+        dense_tx = builders_lib.dense_tower_tx(hp, b1=b1, b2=b2, eps=eps)
+    n_data = mesh.shape["data"]
+    n_model = mesh.shape["model"]
+    plans = shard_lib.make_plans(cfg.vocab_sizes, n_model, scheme)
+    upd_kw = dict(clip=clip, r=r, zeta=zeta, lr=hp.emb_lr, l2=hp.emb_l2,
+                  b1=b1, b2=b2, eps=eps)
+    n_fields = cfg.n_fields
+
+    EMB = P("model", None)   # prefix spec: broadcasts over the embed tree
+    REP = P()
+
+    def prepare(params):
+        params = dict(params,
+                      embed=shard_lib.pad_embed_tree(params["embed"], plans))
+        return jax.device_put(params, infer_ctr_param_shardings(params, mesh))
+
+    def init(params):
+        def zeros_like_placed(w):
+            return jax.device_put(jnp.zeros(w.shape, w.dtype), w.sharding)
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros_like_placed, params["embed"]),
+            "v": jax.tree.map(zeros_like_placed, params["embed"]),
+            "dense": dense_tx.init(params["dense"]),
+        }
+
+    def local_step(embed_sh, m_sh, v_sh, dense_params, t, ids, feats, labels):
+        # ids/feats/labels are this data-slice's batch shard, replicated
+        # along "model"; embed/m/v are this model-slice's table rows,
+        # replicated along "data".
+        b_global = ids.shape[0] * n_data
+
+        def partial_lookup(tables):
+            cols = [shard_lib.lookup_partial(
+                        tables[f"field_{i}"], ids[:, i], plans[f"field_{i}"])
+                    for i in range(n_fields)]
+            return jnp.stack(cols, axis=1)               # [b_loc, F, dim]
+
+        emb = jax.lax.psum(partial_lookup(embed_sh["fm"]), "model")
+        lin_emb = (jax.lax.psum(partial_lookup(embed_sh["lin"]), "model")
+                   if "lin" in embed_sh else None)
+
+        # Differentiate w.r.t. the *assembled* embeddings (no collectives
+        # inside the grad), then scatter the cotangent onto local rows
+        # explicitly — the transpose of the masked lookup.
+        def loss_fn(emb_args, dense_p):
+            e, le = emb_args
+            logits = ctr._forward_from_emb(dense_p, cfg, e, le, feats)
+            return jnp.sum(jax.nn.softplus(logits) - labels * logits) / b_global
+
+        if lin_emb is None:
+            loss_loc, ((g_emb, _), g_dense) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1))((emb, None), dense_params)
+            g_lin = None
+        else:
+            loss_loc, ((g_emb, g_lin), g_dense) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1))((emb, lin_emb), dense_params)
+
+        loss = jax.lax.psum(loss_loc, "data")
+        g_dense = jax.lax.psum(g_dense, "data")
+
+        new_w = {g: {} for g in embed_sh}
+        new_m = {g: {} for g in embed_sh}
+        new_v = {g: {} for g in embed_sh}
+        for i in range(n_fields):
+            f = f"field_{i}"
+            plan = plans[f]
+            cnt = jax.lax.psum(
+                shard_lib.counts_partial(ids[:, i], plan), "data")
+            for group, g_batch in (("fm", g_emb), ("lin", g_lin)):
+                if group not in embed_sh:
+                    continue
+                g_rows = jax.lax.psum(
+                    shard_lib.rowgrad_partial(g_batch[:, i, :], ids[:, i],
+                                              plan), "data")
+                new_w[group][f], new_m[group][f], new_v[group][f] = (
+                    shard_lib.shard_update(
+                        embed_sh[group][f], g_rows, cnt,
+                        m_sh[group][f], v_sh[group][f], t, **upd_kw))
+        return new_w, new_m, new_v, g_dense, loss
+
+    smapped = shard_lib.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(EMB, EMB, EMB, REP, REP,
+                  P("data", None), P("data", None), P("data")),
+        out_specs=(EMB, EMB, EMB, REP, REP),
+    )
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, state, batch):
+        ids = batch["ids"]
+        if ids.shape[0] % n_data:
+            raise ValueError(
+                f"batch {ids.shape[0]} not divisible by data axis {n_data}")
+        t = state["step"] + 1
+        # "mod" stores rows logically but shards them round-robin: convert
+        # logical -> physical around the shard_map (identity under "div")
+        w_p = shard_lib.to_physical(params["embed"], plans)
+        m_p = shard_lib.to_physical(state["m"], plans)
+        v_p = shard_lib.to_physical(state["v"], plans)
+        new_w, new_m, new_v, g_dense, loss = smapped(
+            w_p, m_p, v_p, params["dense"], t,
+            ids, batch["dense"], batch["labels"])
+        new_embed = shard_lib.to_logical(new_w, plans)
+        d_updates, d_state = dense_tx.update(
+            g_dense, state["dense"], params["dense"])
+        new_dense = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), params["dense"], d_updates)
+        new_state = {"step": t, "m": shard_lib.to_logical(new_m, plans),
+                     "v": shard_lib.to_logical(new_v, plans),
+                     "dense": d_state}
+        return {"embed": new_embed, "dense": new_dense}, new_state, {
+            "loss": loss}
+
+    def flush(params, state):
+        """Identity: the sharded path defers nothing (absent ids decay
+        eagerly on their shard, exactly like the dense path)."""
+        return params, state
+
+    def export(params):
+        """Strip pad rows: back to canonical [vocab, dim] tables, logical
+        row order — interchangeable with every other placement's params."""
+        return dict(params,
+                    embed=shard_lib.unpad_embed_tree(params["embed"], plans))
+
+    return step, init, flush, prepare, export
+
+
 def make_eval_fn(cfg: ctr.CTRConfig):
     @jax.jit
     def logits_fn(params, ids, dense):
@@ -278,6 +441,10 @@ class TrainResult:
     final_eval: dict
     seconds: float
     steps: int
+    # final (flushed) model params and optimizer state — for checkpointing
+    # and for asserting bundle contracts (e.g. flush idempotence) in tests
+    params: object = None
+    opt_state: object = None
 
 
 def train_ctr(
@@ -294,12 +461,16 @@ def train_ctr(
     step_bundle=None,
 ) -> TrainResult:
     """Epoch driver. By default steps through the composable-optimizer path
-    (``tx``); pass a ``core.builders.TrainStepBundle`` (e.g. the sparse
-    unique-id path) to drive an explicit (step, init, flush) triple instead
-    — ``flush`` runs before every eval so lazily-decayed params are exact.
+    (``tx``); pass a ``core.builders.TrainStepBundle`` (any
+    ``repro.embed.EmbeddingStore`` placement) to drive an explicit
+    (step, init, flush, prepare) bundle instead — ``prepare`` lays params
+    out for the placement once (the sharded store pads tables and shards
+    rows over the mesh), and ``flush`` runs before every eval so
+    lazily-decayed params are exact.
     """
     params = ctr.init(jax.random.key(seed), cfg)
     if step_bundle is not None:
+        params = step_bundle.prepare(params)
         step_fn, opt_state, flush = (
             step_bundle.step, step_bundle.init(params), step_bundle.flush)
     else:
@@ -334,4 +505,4 @@ def train_ctr(
         else (eval_fn(params, test_ds) if test_ds is not None else {})
     )
     return TrainResult(history=history, final_eval=dict(final), seconds=seconds,
-                       steps=n_steps)
+                       steps=n_steps, params=params, opt_state=opt_state)

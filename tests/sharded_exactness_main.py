@@ -1,0 +1,124 @@
+"""Multi-device exactness driver for the sharded embedding placement.
+
+Run as a script in its own subprocess (tests/test_sharded_embedding.py does)
+because the virtual-device flag must be set before jax initializes; the
+main suite keeps the plain 1-device backend. Each case trains the same
+deepfm/dcnv2 config through the single-device dense substrate chain and the
+mesh-sharded shard_map step, then reports max param error, AUC on a held-out
+set for both, and the last-step loss gap — one JSON line per case.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+
+import json
+import sys
+
+import numpy as np
+
+
+# uneven on purpose: 57 rows over 4 shards leaves a remainder pad row
+VOCABS = (57, 13, 5)
+N_STEPS = 5
+BATCH = 32
+
+
+def _batches(n_steps, batch, seed, one_shard_of=0):
+    """Duplicate-heavy batches; ``one_shard_of=M`` keeps every id inside
+    shard 0 of an M-way div partition (id < ceil(vocab/M) per field)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    for _ in range(n_steps):
+        if one_shard_of:
+            his = [max(1, -(-v // one_shard_of)) for v in VOCABS]
+            ids = np.stack([rng.integers(0, hi, size=batch) for hi in his],
+                           axis=1).astype(np.int32)
+        else:
+            ids = np.stack([
+                rng.choice([1, 2, 3, 50, 51], size=batch),
+                rng.integers(0, 13, size=batch),
+                rng.choice([0, 4], size=batch),
+            ], axis=1).astype(np.int32)
+        yield {
+            "ids": jnp.asarray(ids),
+            "dense": jnp.asarray(rng.normal(size=(batch, 3)).astype(np.float32)),
+            "labels": jnp.asarray((rng.random(batch) < 0.3).astype(np.float32)),
+        }
+
+
+def run_case(name, mesh_shape, scheme, model="deepfm", one_shard=False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_optimizer, build_train_step, scale_hyperparams
+    from repro.data.synthetic import make_ctr_dataset
+    from repro.embed import sharded as shard_lib
+    from repro.models import ctr
+    from repro.train.loop import make_eval_fn, make_train_step
+
+    cfg = ctr.CTRConfig(name=model, vocab_sizes=VOCABS, n_dense=3,
+                        emb_dim=8, mlp_dims=(16, 16, 16), emb_sigma=1e-2)
+    hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-3,
+                           base_batch=64, batch_size=64, base_dense_lr=2e-3)
+    params0 = ctr.init(jax.random.key(0), cfg)
+
+    tx = build_optimizer(hp, warmup_steps=0)
+    dstate = tx.init(params0)
+    dstep = make_train_step(cfg, tx)
+    dparams = jax.tree.map(jnp.copy, params0)
+
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    bundle = build_train_step(cfg, hp, path="sharded", mesh=mesh,
+                              partition=scheme, warmup_steps=0)
+    sparams = bundle.prepare(jax.tree.map(jnp.copy, params0))
+    sstate = bundle.init(sparams)
+
+    loss_err = 0.0
+    gen = _batches(N_STEPS, BATCH, seed=1,
+                   one_shard_of=mesh_shape[1] if one_shard else 0)
+    for b in gen:
+        dparams, dstate, da = dstep(dparams, dstate, dict(b))
+        sparams, sstate, sa = bundle.step(sparams, sstate, dict(b))
+        loss_err = max(loss_err, abs(float(da["loss"]) - float(sa["loss"])))
+    sparams, sstate = bundle.flush(sparams, sstate)
+
+    plans = shard_lib.make_plans(cfg.vocab_sizes, mesh.shape["model"], scheme)
+    s_embed = shard_lib.unpad_embed_tree(sparams["embed"], plans)
+    embed_err = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in
+        zip(jax.tree.leaves(dparams["embed"]), jax.tree.leaves(s_embed)))
+    dense_err = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in
+        zip(jax.tree.leaves(dparams["dense"]), jax.tree.leaves(sparams["dense"])))
+
+    eval_ds = make_ctr_dataset(2000, VOCABS, n_dense=3, zipf_a=1.1, seed=7)
+    eval_fn = make_eval_fn(cfg)
+    auc_dense = eval_fn(dparams, eval_ds)["auc"]
+    auc_sharded = eval_fn(sparams, eval_ds)["auc"]
+
+    return {"name": name, "mesh": list(mesh_shape), "scheme": scheme,
+            "model": model, "one_shard": one_shard,
+            "embed_err": embed_err, "dense_err": dense_err,
+            "loss_err": loss_err,
+            "auc_dense": auc_dense, "auc_sharded": auc_sharded}
+
+
+CASES = {
+    "2x4_div": dict(mesh_shape=(2, 4), scheme="div"),
+    "8x1_div": dict(mesh_shape=(8, 1), scheme="div"),
+    "2x4_mod": dict(mesh_shape=(2, 4), scheme="mod", model="dcnv2"),
+    "2x4_one_shard": dict(mesh_shape=(2, 4), scheme="div", one_shard=True),
+}
+
+
+def main(argv):
+    names = argv[1:] or list(CASES)
+    for name in names:
+        print(json.dumps(run_case(name, **CASES[name])), flush=True)
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -1,0 +1,250 @@
+"""Mesh-sharded embedding placement: row-shard plan math, CTR param specs,
+single-device (1x1 mesh) equivalence in-process, and the full multi-device
+exactness matrix (2x4 / 8x1 / mod / one-shard batches) in an 8-virtual-device
+subprocess (the main suite must keep seeing the 1-device backend).
+
+The contract under test: the shard_map train step — masked local lookup +
+psum over "model", per-shard CowClip/L2/Adam with counts and row grads
+psum'd over "data" — matches the single-device dense substrate optimizer to
+float32 tolerance, params and AUC alike.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.core import build_optimizer, build_train_step, scale_hyperparams
+from repro.embed import sharded as shard_lib
+from repro.embed.sharded import RowShardPlan
+from repro.models import ctr
+from repro.sharding.specs import ctr_param_spec
+from repro.train.loop import make_train_step
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+VOCABS = (57, 13, 5)
+
+
+def _cfg(**kw):
+    return ctr.CTRConfig(name="deepfm", vocab_sizes=VOCABS, n_dense=3,
+                         emb_dim=8, mlp_dims=(16, 16, 16), emb_sigma=1e-2,
+                         **kw)
+
+
+def _hp():
+    return scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-3,
+                             base_batch=64, batch_size=64,
+                             base_dense_lr=2e-3)
+
+
+def _batches(n_steps, batch=32, seed=1):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_steps):
+        ids = np.stack([
+            rng.choice([1, 2, 3, 50, 51], size=batch),
+            rng.integers(0, 13, size=batch),
+            rng.choice([0, 4], size=batch),
+        ], axis=1).astype(np.int32)
+        yield {
+            "ids": jnp.asarray(ids),
+            "dense": jnp.asarray(rng.normal(size=(batch, 3)).astype(np.float32)),
+            "labels": jnp.asarray((rng.random(batch) < 0.3).astype(np.float32)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# row-shard plan math (pure, no mesh)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["div", "mod"])
+@pytest.mark.parametrize("vocab,n_shards", [(57, 4), (13, 4), (5, 2),
+                                            (8, 8), (100, 1)])
+def test_plan_id_mapping_bijective(vocab, n_shards, scheme):
+    plan = RowShardPlan(vocab, n_shards, scheme)
+    assert plan.padded_vocab >= vocab
+    assert plan.padded_vocab % n_shards == 0
+    ids = jnp.arange(vocab)
+    shard = np.asarray(plan.shard_of(ids))
+    local = np.asarray(plan.local_row(ids))
+    assert (shard >= 0).all() and (shard < n_shards).all()
+    assert (local >= 0).all() and (local < plan.rows_per_shard).all()
+    # (shard, local) pairs are unique -> the mapping is injective
+    flat = shard * plan.rows_per_shard + local
+    assert len(np.unique(flat)) == vocab
+
+
+@pytest.mark.parametrize("scheme", ["div", "mod"])
+def test_plan_layout_perms_invert(scheme):
+    plan = RowShardPlan(57, 4, scheme)
+    l_of_p = plan.logical_of_physical()
+    p_of_l = plan.physical_of_logical()
+    n = plan.padded_vocab
+    assert sorted(l_of_p) == list(range(n))
+    np.testing.assert_array_equal(l_of_p[p_of_l], np.arange(n))
+    # physical position of logical id i is (shard, local) flattened
+    ids = np.arange(plan.vocab)
+    shard = np.asarray(plan.shard_of(jnp.asarray(ids)))
+    local = np.asarray(plan.local_row(jnp.asarray(ids)))
+    np.testing.assert_array_equal(p_of_l[ids],
+                                  shard * plan.rows_per_shard + local)
+
+
+def test_div_layout_is_identity_mod_is_not():
+    assert RowShardPlan(57, 4, "div").is_identity_layout
+    assert not RowShardPlan(57, 4, "mod").is_identity_layout
+    # 1 shard: every scheme degenerates to the identity
+    assert RowShardPlan(57, 1, "mod").is_identity_layout
+
+
+def test_pad_unpad_round_trip():
+    plan = RowShardPlan(57, 4)
+    w = jnp.arange(57.0 * 3).reshape(57, 3)
+    padded = shard_lib.pad_rows(w, plan.padded_vocab)
+    assert padded.shape == (60, 3)
+    assert float(jnp.abs(padded[57:]).sum()) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(shard_lib.unpad_rows(padded, 57)), np.asarray(w))
+
+
+def test_to_physical_to_logical_round_trip_mod():
+    plans = {"field_0": RowShardPlan(57, 4, "mod")}
+    embed = {"fm": {"field_0": shard_lib.pad_rows(
+        jnp.arange(57.0 * 2).reshape(57, 2), 60)}}
+    phys = shard_lib.to_physical(embed, plans)
+    back = shard_lib.to_logical(phys, plans)
+    np.testing.assert_array_equal(np.asarray(back["fm"]["field_0"]),
+                                  np.asarray(embed["fm"]["field_0"]))
+    # physical block 0 holds ids congruent to 0 mod 4 (values are 2*id)
+    blk0 = np.asarray(phys["fm"]["field_0"][:15, 0])
+    np.testing.assert_array_equal(blk0, np.arange(0, 57, 4) * 2)
+
+
+def test_unknown_scheme_rejected():
+    with pytest.raises(ValueError, match="unknown partition scheme"):
+        RowShardPlan(10, 2, "hash")
+
+
+# ---------------------------------------------------------------------------
+# CTR-aware param specs
+# ---------------------------------------------------------------------------
+
+
+def _mesh_2x4():
+    try:
+        return AbstractMesh((2, 4), ("data", "model"))   # jax >= 0.5
+    except TypeError:
+        return AbstractMesh((("data", 2), ("model", 4)))  # 0.4.x
+
+
+def test_ctr_param_spec_rows_over_model_tower_replicated():
+    mesh = _mesh_2x4()
+    assert ctr_param_spec("embed/fm/field_0", (60, 10), mesh) == P("model", None)
+    # Adam moment leaves share the table paths -> same rule
+    assert ctr_param_spec("m/fm/field_3", (1000, 10), mesh) == P("model", None)
+    # dense tower replicates outright, whatever the leaf
+    assert ctr_param_spec("dense/mlp/w0", (80, 400), mesh) == P(None, None)
+    assert ctr_param_spec("dense/cross/w1", (80, 80), mesh) == P(None, None)
+    assert ctr_param_spec("dense/lin_bias", (), mesh) == P()
+
+
+def test_ctr_param_spec_indivisible_rows_fall_back():
+    mesh = _mesh_2x4()
+    # 57 rows over model=4 doesn't divide -> replicated (the sharded store
+    # pads to RowShardPlan.padded_vocab before applying the specs)
+    assert ctr_param_spec("embed/fm/field_0", (57, 10), mesh) == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# single-device (1x1 mesh) equivalence — in-process
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["div", "mod"])
+def test_sharded_step_matches_dense_on_1x1_mesh(scheme):
+    cfg = _cfg()
+    hp = _hp()
+    params0 = ctr.init(jax.random.key(0), cfg)
+
+    tx = build_optimizer(hp, warmup_steps=0)
+    dstate = tx.init(params0)
+    dstep = make_train_step(cfg, tx)
+    dparams = jax.tree.map(jnp.copy, params0)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bundle = build_train_step(cfg, hp, path="sharded", mesh=mesh,
+                              partition=scheme, warmup_steps=0)
+    sparams = bundle.prepare(jax.tree.map(jnp.copy, params0))
+    sstate = bundle.init(sparams)
+
+    for b in _batches(4):
+        dparams, dstate, da = dstep(dparams, dstate, dict(b))
+        sparams, sstate, sa = bundle.step(sparams, sstate, dict(b))
+        assert float(da["loss"]) == pytest.approx(float(sa["loss"]), rel=1e-5)
+
+    for a, b in zip(jax.tree.leaves(dparams),
+                    jax.tree.leaves(sparams)):
+        assert float(jnp.max(jnp.abs(a - b))) <= 1e-5
+
+
+def test_sharded_prepare_pads_and_init_matches():
+    cfg = _cfg()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bundle = build_train_step(cfg, _hp(), path="sharded", mesh=mesh)
+    params = bundle.prepare(ctr.init(jax.random.key(0), cfg))
+    # vocab 57 pads to 57 (model=1 -> rows_per_shard=57); shapes preserved
+    assert params["embed"]["fm"]["field_0"].shape == (57, 8)
+    state = bundle.init(params)
+    assert state["m"]["fm"]["field_0"].shape == (57, 8)
+    assert int(state["step"]) == 0
+
+
+def test_sharded_step_rejects_odd_batch():
+    cfg = _cfg()
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices for a data axis > 1")
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
+    bundle = build_train_step(cfg, _hp(), path="sharded", mesh=mesh)
+    params = bundle.prepare(ctr.init(jax.random.key(0), cfg))
+    state = bundle.init(params)
+    b = next(_batches(1, batch=31))
+    with pytest.raises(ValueError, match="not divisible"):
+        bundle.step(params, state, b)
+
+
+# ---------------------------------------------------------------------------
+# multi-device exactness matrix (8 virtual devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def exactness_records():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)   # the driver sets its own 8-device flag
+    script = os.path.join(REPO, "tests", "sharded_exactness_main.py")
+    proc = subprocess.run([sys.executable, script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    recs = [json.loads(line) for line in proc.stdout.strip().splitlines()]
+    return {r["name"]: r for r in recs}
+
+
+@pytest.mark.parametrize("case", ["2x4_div", "8x1_div", "2x4_mod",
+                                  "2x4_one_shard"])
+def test_sharded_matches_dense_multi_device(exactness_records, case):
+    """Acceptance criterion: the sharded step on an 8-virtual-device mesh
+    matches the single-device dense path (params and AUC) to f32 tolerance,
+    covering 2x4 and 8x1 meshes, uneven vocab-per-shard remainders, mod
+    round-robin partitioning, and a batch whose ids all land on one shard."""
+    rec = exactness_records[case]
+    assert rec["embed_err"] <= 1e-5, rec
+    assert rec["dense_err"] <= 1e-5, rec
+    assert rec["loss_err"] <= 1e-5, rec
+    assert abs(rec["auc_dense"] - rec["auc_sharded"]) <= 1e-3, rec
