@@ -179,6 +179,46 @@ def sparse_embedding_bench(
     return rows
 
 
+def _time_bundle_steps(step_fn, params, state, batch_data, n=3):
+    """Average step time (us) of a jit'd bundle step, threading the donated
+    (params, state) through; first call compiles and warms."""
+    params, state, _ = step_fn(params, state, dict(batch_data))
+    jax.block_until_ready(params)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        params, state, _ = step_fn(params, state, dict(batch_data))
+    jax.block_until_ready(params)
+    return 1e6 * (time.perf_counter() - t0) / n
+
+
+def _sharded_bench_case(vocab: int, batch: int):
+    """The deepfm config + Zipf batch shared by the sharded and hybrid
+    benches (a change to the timing grid must hit both, or their
+    cross-bench comparison in docs/benchmarks.md skews)."""
+    import numpy as np
+
+    from repro.core import scale_hyperparams
+    from repro.models import ctr as ctr_lib
+
+    cfg = ctr_lib.CTRConfig(
+        name="deepfm", vocab_sizes=(vocab, 10_000), n_dense=4,
+        emb_dim=10, mlp_dims=(64, 64, 64), emb_sigma=1e-2)
+    hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-5,
+                           base_batch=batch, batch_size=batch,
+                           base_dense_lr=2e-3)
+    rng = np.random.default_rng(vocab)
+    ids = np.stack([
+        np.minimum(rng.zipf(1.2, size=batch) - 1, vocab - 1),
+        rng.integers(0, 10_000, size=batch),
+    ], axis=1).astype(np.int32)
+    batch_data = {
+        "ids": jnp.asarray(ids),
+        "dense": jnp.asarray(rng.normal(size=(batch, 4)).astype(np.float32)),
+        "labels": jnp.asarray((rng.random(batch) < 0.3).astype(np.float32)),
+    }
+    return cfg, hp, batch_data
+
+
 def sharded_embedding_bench(
     out_path: str = "BENCH_sharded_embedding.json",
     fast: bool = False,
@@ -204,9 +244,7 @@ def sharded_embedding_bench(
     table-update and memory win needs real chips, where the s shards run
     in parallel.
     """
-    import numpy as np
-
-    from repro.core import build_optimizer, build_train_step, scale_hyperparams
+    from repro.core import build_optimizer, build_train_step
     from repro.models import ctr as ctr_lib
     from repro.train.loop import make_train_step
 
@@ -220,39 +258,15 @@ def sharded_embedding_bench(
     batch = 8192
     shard_counts = (1, 2, 4, 8)
 
-    def time_steps(step_fn, params, state, batch_data, n=3):
-        params, state, _ = step_fn(params, state, dict(batch_data))
-        jax.block_until_ready(params)
-        t0 = time.perf_counter()
-        for _ in range(n):
-            params, state, _ = step_fn(params, state, dict(batch_data))
-        jax.block_until_ready(params)
-        return 1e6 * (time.perf_counter() - t0) / n
-
     records, rows = [], []
     for vocab in vocabs:
-        cfg = ctr_lib.CTRConfig(
-            name="deepfm", vocab_sizes=(vocab, 10_000), n_dense=4,
-            emb_dim=10, mlp_dims=(64, 64, 64), emb_sigma=1e-2)
-        hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-5,
-                               base_batch=batch, batch_size=batch,
-                               base_dense_lr=2e-3)
-        rng = np.random.default_rng(vocab)
-        ids = np.stack([
-            np.minimum(rng.zipf(1.2, size=batch) - 1, vocab - 1),
-            rng.integers(0, 10_000, size=batch),
-        ], axis=1).astype(np.int32)
-        batch_data = {
-            "ids": jnp.asarray(ids),
-            "dense": jnp.asarray(rng.normal(size=(batch, 4)).astype(np.float32)),
-            "labels": jnp.asarray((rng.random(batch) < 0.3).astype(np.float32)),
-        }
+        cfg, hp, batch_data = _sharded_bench_case(vocab, batch)
         params0 = ctr_lib.init(jax.random.key(0), cfg)
 
         tx = build_optimizer(hp, warmup_steps=0)
-        dense_us = time_steps(make_train_step(cfg, tx),
-                              jax.tree.map(jnp.copy, params0),
-                              tx.init(params0), batch_data)
+        dense_us = _time_bundle_steps(make_train_step(cfg, tx),
+                                      jax.tree.map(jnp.copy, params0),
+                                      tx.init(params0), batch_data)
         rows.append(_csv(f"sharded_embed/v{vocab}/dense_1dev", dense_us,
                          "baseline"))
 
@@ -261,8 +275,8 @@ def sharded_embedding_bench(
             bundle = build_train_step(cfg, hp, path="sharded", mesh=mesh,
                                       warmup_steps=0)
             params = bundle.prepare(jax.tree.map(jnp.copy, params0))
-            us = time_steps(bundle.step, params, bundle.init(params),
-                            batch_data)
+            us = _time_bundle_steps(bundle.step, params, bundle.init(params),
+                                    batch_data)
             rec = {"vocab": vocab, "batch": batch, "mesh_data": 1,
                    "mesh_model": s, "partition": "div", "step_us": us,
                    "dense_1dev_us": dense_us,
@@ -281,6 +295,95 @@ def sharded_embedding_bench(
     return rows
 
 
+def hybrid_embedding_bench(
+    out_path: str = "BENCH_sharded_sparse.json",
+    fast: bool = False,
+    n_devices: int = 8,
+) -> list:
+    """``sharded`` vs ``sharded_sparse`` step time and per-step embedding
+    optimizer HBM bytes at production-scale vocab on 8 virtual devices,
+    emitted to ``BENCH_sharded_sparse.json``.
+
+    The same deepfm/batch grid as ``sharded_embedding_bench``, on a (1, 8)
+    mesh. ``update_bytes`` is the *analytic* optimizer-update traffic per
+    step (w/m/v read + write, f32): the dense per-shard update streams every
+    padded row, the hybrid streams only the per-shard unique slots (capacity
+    ``min(batch, rows_per_shard)`` per field, plus its last_step column) —
+    at vocab >= 1M the hybrid touches orders of magnitude fewer bytes, which
+    is the number that becomes wall-clock on real HBM-bound chips. As with
+    the shard bench, virtual-device *step times* on one CPU socket are a
+    structural regression signal, not a speedup demo (docs/benchmarks.md).
+    """
+    from repro.core import build_train_step
+    from repro.embed.sharded import RowShardPlan
+    from repro.embed.sharded_sparse import shard_capacity
+    from repro.models import ctr as ctr_lib
+
+    if jax.device_count() < n_devices:
+        raise SystemExit(
+            f"[hybrid_embedding_bench] needs {n_devices} devices, have "
+            f"{jax.device_count()} — run via benchmarks.run --hybrid-bench "
+            f"(which sets XLA_FLAGS before jax initializes)")
+
+    vocabs = (1_000_000,) if fast else (1_000_000, 2_000_000)
+    batch = 8192
+    n_model = n_devices
+
+    def update_bytes(cfg, placement):
+        """Analytic per-step optimizer-update HBM traffic over all shards:
+        4 bytes * (3 read + 3 write) per (row, dim) element, plus the
+        hybrid's per-group last_step columns (int32 read + write; the fm
+        and 1-dim LR tables each carry one)."""
+        groups = [cfg.emb_dim, 1]    # deepfm: fm tables + 1-dim LR stream
+        total = 0
+        for v in cfg.vocab_sizes:
+            plan = RowShardPlan(v, n_model)
+            if placement == "sharded":
+                rows = plan.padded_vocab
+                total += sum(rows * d * 4 * 6 for d in groups)
+            else:
+                rows = n_model * shard_capacity(plan, batch)
+                total += sum(rows * d * 4 * 6 for d in groups)
+                total += len(groups) * rows * 4 * 2       # last_step
+        return total
+
+    records, rows = [], []
+    for vocab in vocabs:
+        cfg, hp, batch_data = _sharded_bench_case(vocab, batch)
+        params0 = ctr_lib.init(jax.random.key(0), cfg)
+        mesh = jax.make_mesh((1, n_model), ("data", "model"))
+
+        by_placement = {}
+        for placement in ("sharded", "sharded_sparse"):
+            bundle = build_train_step(cfg, hp, path=placement, mesh=mesh,
+                                      warmup_steps=0)
+            params = bundle.prepare(jax.tree.map(jnp.copy, params0))
+            us = _time_bundle_steps(bundle.step, params, bundle.init(params),
+                                    batch_data)
+            by_placement[placement] = us
+            rec = {"vocab": vocab, "batch": batch, "mesh_data": 1,
+                   "mesh_model": n_model, "placement": placement,
+                   "step_us": us,
+                   "update_bytes": update_bytes(cfg, placement)}
+            records.append(rec)
+            rows.append(_csv(
+                f"hybrid_embed/v{vocab}/{placement}", us,
+                f"update_bytes={rec['update_bytes']}"))
+        ratio = (update_bytes(cfg, "sharded")
+                 / max(update_bytes(cfg, "sharded_sparse"), 1))
+        rows.append(_csv(
+            f"hybrid_embed/v{vocab}/bytes_ratio", 0.0,
+            f"dense_shard_bytes_over_hybrid={ratio:.1f}x;"
+            f"step_ratio={by_placement['sharded'] / max(by_placement['sharded_sparse'], 1e-9):.2f}x"))
+
+    with open(out_path, "w") as f:
+        json.dump({"emb_dim": 10, "batch": batch, "backend":
+                   jax.default_backend(), "n_devices": jax.device_count(),
+                   "records": records}, f, indent=2)
+    print(f"[hybrid_embedding_bench] wrote {out_path}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -290,14 +393,21 @@ def main() -> None:
     ap.add_argument("--shard-bench", action="store_true",
                     help="run only the sharded step-time-vs-shard-count grid "
                          "(spawns 8 virtual host devices)")
+    ap.add_argument("--hybrid-bench", action="store_true",
+                    help="run only the sharded-vs-sharded_sparse grid "
+                         "(spawns 8 virtual host devices)")
     args = ap.parse_args()
 
-    if args.shard_bench:
+    if args.shard_bench or args.hybrid_bench:
         # must precede the first jax backend touch in this process
         from repro.launch.mesh import force_host_device_count
 
         force_host_device_count(8)
-        rows = sharded_embedding_bench(fast=args.fast)
+        rows = []
+        if args.shard_bench:
+            rows += sharded_embedding_bench(fast=args.fast)
+        if args.hybrid_bench:
+            rows += hybrid_embedding_bench(fast=args.fast)
         print("\nname,us_per_call,derived")
         for row in rows:
             print(row)

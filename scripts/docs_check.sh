@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Smoke-run every documented CLI example so docs/cli.md cannot rot.
+#
+# Extracts each command from the plain ```bash fences of docs/cli.md
+# (blocks marked ```bash no-smoke are skipped — external data / real
+# hardware), joins backslash continuations, and runs it on synthetic data
+# with small overrides appended (argparse: the last occurrence of a flag
+# wins, so the documented flags still parse exactly as written):
+#
+#   --steps 2 --samples 4096 --epochs 1 --batch 256
+#
+# Wired into CI (.github/workflows/ci.yml). Run locally the same way:
+#   bash scripts/docs_check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+DOC=docs/cli.md
+SMOKE="--steps 2 --samples 4096 --epochs 1 --batch 256"
+
+for page in docs/architecture.md docs/cowclip.md docs/cli.md docs/benchmarks.md; do
+  [ -s "$page" ] || { echo "[docs-check] missing page: $page" >&2; exit 1; }
+done
+
+# commands: inside ```bash fences only, comments stripped, continuations joined
+mapfile -t cmds < <(
+  awk '/^```bash$/{inb=1;next} /^```/{inb=0} inb' "$DOC" \
+  | sed -e 's/[[:space:]]*#.*$//' \
+  | awk '{ if (sub(/\\$/,"")) { buf = buf $0 " " } else if (length(buf $0)) { print buf $0; buf = "" } }' \
+  | grep 'repro\.launch\.train'
+)
+
+if [ "${#cmds[@]}" -eq 0 ]; then
+  echo "[docs-check] no runnable commands found in $DOC" >&2
+  exit 1
+fi
+
+echo "[docs-check] ${#cmds[@]} documented commands"
+i=0
+for cmd in "${cmds[@]}"; do
+  i=$((i + 1))
+  echo "[docs-check] ($i/${#cmds[@]}) $cmd $SMOKE"
+  eval "$cmd $SMOKE"
+done
+echo "[docs-check] all documented commands ran"

@@ -161,7 +161,7 @@ class TrainStepBundle(NamedTuple):
     export: Callable = identity_prepare
 
 
-TRAIN_PATHS = ("substrate", "fused", "sparse", "sharded")
+TRAIN_PATHS = ("substrate", "fused", "sparse", "sharded", "sharded_sparse")
 
 
 def build_train_step(
@@ -181,18 +181,22 @@ def build_train_step(
     mesh=None,
     partition: str = "div",
 ) -> TrainStepBundle:
-    """Route a CTR train step through one of the four update paths, all
+    """Route a CTR train step through one of the five update paths, all
     served by the ``repro.embed.EmbeddingStore`` placements:
 
-      substrate : composable GradientTransformation chain (the oracle);
-                  dense placement
-      fused     : dense fused Pallas CowClip+L2+Adam kernel per table;
-                  dense placement
-      sparse    : unique-id gather -> fused row update -> scatter, with
-                  lazy L2 decay (O(batch) update traffic)
-      sharded   : tables row-sharded over mesh axis "model", batch over
-                  "data", shard_map step (``mesh``/``partition`` apply;
-                  mesh=None uses every local device as (1, n))
+      substrate      : composable GradientTransformation chain (the oracle);
+                       dense placement
+      fused          : dense fused Pallas CowClip+L2+Adam kernel per table;
+                       dense placement
+      sparse         : unique-id gather -> fused row update -> scatter, with
+                       lazy L2 decay (O(batch) update traffic)
+      sharded        : tables row-sharded over mesh axis "model", batch over
+                       "data", shard_map step with a dense per-shard update
+                       (``mesh``/``partition`` apply; mesh=None uses every
+                       local device as (1, n))
+      sharded_sparse : the hybrid — row-sharded tables with a per-shard
+                       unique-id (lazy-decay) update, so memory is
+                       O(vocab/n_model) and update traffic O(batch) at once
 
     ``path=None`` honors the config knobs: ``cfg.placement`` if set, else
     ``cfg.sparse`` selects "sparse", otherwise "substrate".

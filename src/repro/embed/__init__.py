@@ -1,9 +1,12 @@
 """repro.embed — the EmbeddingStore abstraction.
 
-One facade (``store.EmbeddingStore``) over the three embedding placements
-(dense, sparse unique-id, mesh-sharded), each yielding the same
-``TrainStepBundle`` contract; ``sharded`` carries the row-shard plans and
-``shard_map`` building blocks (``sharded.RowShardPlan``)."""
+One facade (``store.EmbeddingStore``) over the four embedding placements
+(dense, sparse unique-id, mesh-sharded, and the sharded+sparse hybrid),
+each yielding the same ``TrainStepBundle`` contract; ``sharded`` carries
+the row-shard plans and ``shard_map`` building blocks
+(``sharded.RowShardPlan``), ``sharded_sparse`` the per-shard unique-id
+dedup and row-update phases. See docs/architecture.md."""
 
 from .sharded import RowShardPlan, default_mesh, make_plans
+from .sharded_sparse import ShardUniqueSets, shard_capacity, shard_unique_sets
 from .store import PLACEMENTS, EmbeddingStore, resolve_path, store_for

@@ -223,6 +223,72 @@ def shard_update(w: jnp.ndarray, g: jnp.ndarray, cnt: jnp.ndarray,
     return w2.astype(w.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
 
 
+def batch_forward_backward(cfg, plans, fwd_tables, dense_params,
+                           ids, feats, labels, n_data: int):
+    """The per-device forward/backward shared by both sharded train steps.
+
+    Masked local lookup of each field (+psum over "model" to assemble the
+    full [b_loc, F, dim] embedding), tower forward on the local batch
+    slice, gradients taken w.r.t. the *assembled* embeddings (no
+    collectives inside the grad — the scatter back onto local rows is done
+    explicitly by the caller via ``rowgrad_partial``), loss and dense-tower
+    grads psum'd over "data".
+
+    Returns ``(loss, g_emb, g_lin, g_dense)``; ``g_lin`` is None for
+    models without the first-order LR stream.
+    """
+    from ..models import ctr as ctr_lib
+
+    n_fields = cfg.n_fields
+    b_global = ids.shape[0] * n_data
+
+    def partial_lookup(tables):
+        cols = [lookup_partial(tables[f"field_{i}"], ids[:, i],
+                               plans[f"field_{i}"])
+                for i in range(n_fields)]
+        return jnp.stack(cols, axis=1)                   # [b_loc, F, dim]
+
+    emb = jax.lax.psum(partial_lookup(fwd_tables["fm"]), "model")
+    lin_emb = (jax.lax.psum(partial_lookup(fwd_tables["lin"]), "model")
+               if "lin" in fwd_tables else None)
+
+    def loss_fn(emb_args, dense_p):
+        e, le = emb_args
+        logits = ctr_lib._forward_from_emb(dense_p, cfg, e, le, feats)
+        return jnp.sum(jax.nn.softplus(logits) - labels * logits) / b_global
+
+    if lin_emb is None:
+        loss_loc, ((g_emb, _), g_dense) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))((emb, None), dense_params)
+        g_lin = None
+    else:
+        loss_loc, ((g_emb, g_lin), g_dense) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))((emb, lin_emb), dense_params)
+
+    loss = jax.lax.psum(loss_loc, "data")
+    g_dense = jax.lax.psum(g_dense, "data")
+    return loss, g_emb, g_lin, g_dense
+
+
+def make_prepare_export(plans, mesh):
+    """The sharded family's param layout pair: ``prepare`` zero-pads every
+    table to ``rows_per_shard * n_shards`` rows (pad rows stay exactly
+    zero: zero grad, zero count, zero coupled-L2 decay) and device_puts
+    rows over "model" via ``sharding.specs.ctr_param_spec``; ``export``
+    strips the pad rows back off, so checkpoints are
+    placement-independent."""
+    from ..sharding.specs import infer_ctr_param_shardings
+
+    def prepare(params):
+        params = dict(params, embed=pad_embed_tree(params["embed"], plans))
+        return jax.device_put(params, infer_ctr_param_shardings(params, mesh))
+
+    def export(params):
+        return dict(params, embed=unpad_embed_tree(params["embed"], plans))
+
+    return prepare, export
+
+
 def default_mesh():
     """All local devices as ("data", "model") = (1, n): table-sharding first,
     the placement this store exists for. Pass an explicit mesh to trade

@@ -1,0 +1,257 @@
+"""Sharded+sparse hybrid placement: per-shard unique-id dedup math.
+
+The ``sharded`` placement (repro.embed.sharded) scales memory — each device
+owns ``rows_per_shard = ceil(vocab / n_model)`` table rows — but its
+optimizer update is still *dense per shard*: every step streams all
+``rows_per_shard`` rows of (w, m, v) through the update, although a CTR
+batch touches only its unique ids (PAPER.md's id-frequency argument; the
+waste Zhao et al. 2022, arXiv:2201.05500, show dominates at production
+vocabs). This module restricts the per-shard update to the batch ids the
+shard owns, composing the two prior placements:
+
+* Each model-shard dedups the *global* batch's ids that map to its rows
+  into a static-capacity unique set (``owned_unique_local`` — capacity
+  O(batch), padded). The global ids are one cheap int32 ``all_gather`` over
+  "data" inside the ``shard_map``; the dedup itself then runs per device,
+  so every data slice of a shard agrees on the slots without a dedicated
+  collective and the sort stays out of the SPMD partitioner.
+* Touched rows are gathered, their pending coupled-L2 decay replayed via a
+  per-row ``last_step`` (the sparse path's lazy-decay contract), then the
+  fused CowClip/L2/Adam row update runs and scatters back — row-local and
+  collective-free, exactly like the dense per-shard update it replaces.
+* **Overflow** (more distinct owned ids than capacity — impossible at the
+  default ``capacity = min(batch, rows_per_shard)``): the shard falls back
+  to the dense per-shard update for that step (catch-up of *all* its rows,
+  then the PR-2 ``shard_update``), so the hybrid stays exact instead of
+  dropping gradient contributions the way the single-device sparse path
+  does. The fallback is per (field, shard) and is reported/logged by the
+  train step.
+
+Forward lookup and row-grad/count assembly reuse ``repro.embed.sharded``'s
+masked-psum building blocks unchanged (``lookup_partial`` + psum over
+"model"; ``rowgrad_partial``/``counts_partial`` + psum over "data") — the
+only difference is that the forward reads rows with their pending decay
+already applied, which ``catchup_phase`` guarantees by scattering the
+caught-up rows into the shard before the lookup.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.cowclip import cowclip_rows
+from ..core.optim import decay_catchup_rows, sparse_adam_rows
+from ..kernels.cowclip import ref as cc_ref
+from ..kernels.cowclip import sparse as cc_sparse
+from .sharded import RowShardPlan, shard_update
+
+
+def shard_capacity(plan: RowShardPlan, batch: int, unique_capacity: int = 0) -> int:
+    """Static per-shard unique-set capacity for one field.
+
+    ``unique_capacity <= 0`` selects the exact default
+    ``min(batch, rows_per_shard)`` — a shard can never see more distinct
+    owned ids than the batch holds or than it has rows, so overflow is
+    impossible. A positive value caps memory at the price of overflow
+    fallbacks (see module docstring).
+    """
+    exact = min(batch, plan.rows_per_shard)
+    if unique_capacity <= 0:
+        return max(1, exact)
+    return max(1, min(unique_capacity, exact))
+
+
+class ShardUniqueSets(NamedTuple):
+    """Per-shard static-capacity dedup of one field's global batch column.
+
+    local_rows: [n_shards, capacity] int32 — owned ids' *local* rows on
+                their shard, ascending by id; pad slots hold
+                ``rows_per_shard`` (out of range -> gathers clip, scatters
+                with ``mode='drop'`` skip).
+    counts:     [n_shards, capacity] float32 global batch occurrence count
+                per slot (CowClip's ``cnt``; 0 on pads).
+    overflow:   [n_shards] bool — shard had more distinct owned ids than
+                capacity and must take the dense fallback this step.
+    """
+
+    local_rows: jnp.ndarray
+    counts: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+def shard_unique_sets(ids_col: jnp.ndarray, plan: RowShardPlan,
+                      capacity: int) -> ShardUniqueSets:
+    """Dedup one field's global batch column per owning shard, all shards at
+    once — the host-level (outside-``shard_map``) view of the dedup, used by
+    tests and benchmarks to compute expected slot assignments.
+
+    The train step itself does NOT use this: it calls
+    ``owned_unique_local`` *inside* the shard_map instead, where each device
+    dedups only the ids its own shard owns. Besides scaling better (one
+    unique per device instead of ``n_shards``), that keeps the sort out of
+    the XLA SPMD partitioner, which (as of jax 0.4.x on CPU) miscompiles a
+    traced ``jnp.unique`` whose output feeds a ``shard_map``.
+    """
+    from ..models.embedding import unique_owned_ids
+
+    shard = plan.shard_of(ids_col)
+    locs, cnts, ovfs = [], [], []
+    for s in range(plan.n_shards):
+        uids, counts, overflow = unique_owned_ids(
+            ids_col, shard == s, plan.vocab, capacity)
+        locs.append(_local_rows(uids, plan))
+        cnts.append(counts)
+        ovfs.append(overflow)
+    return ShardUniqueSets(jnp.stack(locs), jnp.stack(cnts), jnp.stack(ovfs))
+
+
+def _local_rows(uids: jnp.ndarray, plan: RowShardPlan) -> jnp.ndarray:
+    """Owned uids -> local rows; pads (uid == vocab) map out of *local*
+    range explicitly (the local_row of the sentinel can land in range —
+    e.g. ``vocab % n_shards`` under "mod")."""
+    return jnp.where(uids < plan.vocab, plan.local_row(uids),
+                     plan.rows_per_shard).astype(jnp.int32)
+
+
+def owned_unique_local(ids_col: jnp.ndarray, plan: RowShardPlan,
+                       capacity: int, axis_name: str = "model"):
+    """Per-device dedup of the ids this shard owns, inside ``shard_map``.
+
+    ``ids_col`` is the *global* batch column (all-gather the batch's int32
+    ids over "data" first — a few KB). Every data slice of a model-shard
+    runs the identical computation, so the slot assignment is replicated
+    without a dedicated collective, and the sort never crosses devices.
+
+    Returns ``(local_rows [capacity], counts [capacity], overflow bool)``
+    with the ``ShardUniqueSets`` slot conventions.
+    """
+    from ..models.embedding import unique_owned_ids
+
+    r = jax.lax.axis_index(axis_name)
+    uids, counts, overflow = unique_owned_ids(
+        ids_col, plan.shard_of(ids_col) == r, plan.vocab, capacity)
+    return _local_rows(uids, plan), counts, overflow
+
+
+# ---------------------------------------------------------------------------
+# per-device (inside shard_map) phases
+# ---------------------------------------------------------------------------
+
+
+def _safe_local(uloc, counts, rows):
+    """In-range slot indices for the kernels' block index maps. On top of
+    ``safe_uids``'s pad-aliases-last-real-slot remap, clamp into the shard:
+    a shard that owns *no* batch ids has every count at 0, so safe_uids
+    returns the (out-of-range) pad value itself — the clamp makes those
+    all-pad reads hit row ``rows - 1`` instead, and the kernels' ``cnt > 0``
+    write guards keep them write-free."""
+    return jnp.minimum(cc_sparse.safe_uids(uloc, counts), rows - 1)
+
+
+def _gather_catchup_rows(w, m, v, ls, uloc, counts, t, *, use_kernel,
+                         interpret, **adam_kw):
+    """Gather touched rows from this shard and replay their pending decay
+    (through t-1). jnp oracle, or the Pallas kernel with local row indices
+    (``row_offset=0`` — indices are already shard-local here)."""
+    if not use_kernel:
+        return cc_ref.sparse_gather_catchup_reference(
+            w, m, v, ls, uloc, t, **adam_kw)
+    su = _safe_local(uloc, counts, w.shape[0])
+    return cc_sparse.sparse_gather_catchup(
+        w, m, v, ls[su], su, t, interpret=interpret, **adam_kw)
+
+
+def catchup_phase(w, m, v, ls, uloc, counts, overflow, t, *, use_kernel,
+                  interpret, lr, l2, b1=0.9, b2=0.999, eps=1e-8):
+    """Pre-forward phase on one (field, group) shard: make the rows the
+    forward will read exact.
+
+    Sparse branch: gather the touched rows, replay their pending lazy decay,
+    scatter the caught-up weights back so the masked lookup sees them.
+    Overflow branch: catch up *every* row of the shard (the dense fallback
+    needs the whole shard current anyway).
+
+    Returns ``(w_fwd, m_base, v_base, w_rows, m_rows, v_rows)`` — the
+    [rows_per_shard, ...] tensors the forward/update start from plus the
+    caught-up [capacity, dim] rows (gathered from the caught tables on the
+    overflow branch so both branches shape-match under ``lax.cond``).
+
+    ``overflow`` may be the static ``False`` (capacity equals the exact
+    per-shard default, so overflow is impossible): the fallback branch is
+    then never traced.
+    """
+    kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+    rows = w.shape[0]
+    safe = jnp.minimum(uloc, rows - 1)
+
+    def sparse_branch(_):
+        wc, mc, vc = _gather_catchup_rows(
+            w, m, v, ls, uloc, counts, t, use_kernel=use_kernel,
+            interpret=interpret, **kw)
+        w_fwd = w.at[uloc].set(wc.astype(w.dtype), mode="drop")
+        return w_fwd, m, v, wc, mc, vc
+
+    if overflow is False:
+        return sparse_branch(None)
+
+    def dense_branch(_):
+        wc, mc, vc = decay_catchup_rows(w, m, v, ls, t - 1, **kw)
+        wc = wc.astype(w.dtype)
+        return wc, mc, vc, wc[safe], mc[safe], vc[safe]
+
+    return jax.lax.cond(overflow, dense_branch, sparse_branch, None)
+
+
+def update_phase(w_fwd, m_base, v_base, ls, w_rows, m_rows, v_rows,
+                 uloc, counts, overflow, g_full, cnt_full, t, *,
+                 use_kernel, interpret, clip=True, r=1.0, zeta=1e-5,
+                 lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8):
+    """Post-backward phase on one (field, group) shard.
+
+    Sparse branch: gather the psum'd row gradient at the touched slots, run
+    CowClip -> coupled L2 -> Adam on the caught-up rows, scatter back, and
+    stamp ``last_step = t`` on the touched rows only (everything else keeps
+    accruing lazy decay). Overflow branch: the PR-2 dense per-shard update
+    over the fully-caught-up shard, ``last_step = t`` everywhere.
+
+    Returns ``(new_w, new_m, new_v, new_ls)``. ``overflow`` may be the
+    static ``False`` (see ``catchup_phase``); ``cnt_full`` is only read by
+    the fallback branch and may then be None.
+    """
+    rows = w_fwd.shape[0]
+    safe = jnp.minimum(uloc, rows - 1)
+    adam_kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+
+    def sparse_branch(_):
+        g_rows = g_full[safe]
+        if use_kernel:
+            su = _safe_local(uloc, counts, rows)
+            w2, m2, v2 = cc_sparse.sparse_update_scatter(
+                w_fwd, m_base, v_base, su, counts, w_rows, g_rows,
+                m_rows, v_rows, t, r=r, zeta=zeta, clip=clip,
+                interpret=interpret, **adam_kw)
+        else:
+            g32 = g_rows.astype(jnp.float32)
+            if clip:
+                g32 = cowclip_rows(g32, w_rows, counts, r=r, zeta=zeta)
+            wn, mn, vn = sparse_adam_rows(
+                g32, w_rows, m_rows, v_rows, t, **adam_kw)
+            w2 = w_fwd.at[uloc].set(wn.astype(w_fwd.dtype), mode="drop")
+            m2 = m_base.at[uloc].set(mn.astype(m_base.dtype), mode="drop")
+            v2 = v_base.at[uloc].set(vn.astype(v_base.dtype), mode="drop")
+        ls2 = ls.at[uloc].set(t.astype(ls.dtype), mode="drop")
+        return w2, m2, v2, ls2
+
+    if overflow is False:
+        return sparse_branch(None)
+
+    def dense_branch(_):
+        w2, m2, v2 = shard_update(
+            w_fwd, g_full, cnt_full, m_base, v_base, t, clip=clip,
+            r=r, zeta=zeta, **adam_kw)
+        return w2, m2, v2, jnp.full_like(ls, t)
+
+    return jax.lax.cond(overflow, dense_branch, sparse_branch, None)

@@ -1,4 +1,4 @@
-"""EmbeddingStore: one facade over the three embedding placements.
+"""EmbeddingStore: one facade over the four embedding placements.
 
 The embedding tables are 99.9% of a CTR model's parameters (paper Table 1),
 and every scaling decision in this repo is a decision about where those
@@ -14,12 +14,21 @@ rows live and how their optimizer update runs:
                 memory but batch-bound compute.
 * ``sharded`` — tables row-sharded over the mesh's ``"model"`` axis, batch
                 split over ``"data"``, via ``shard_map`` (repro.embed.sharded).
-                Per-device table memory and update cost drop by the model-axis
-                size; CowClip keeps the embedding update collective-free.
+                Per-device table memory drops by the model-axis size, but
+                each shard's update is still dense over its rows;
+                CowClip keeps the embedding update collective-free.
+* ``sharded_sparse`` — the hybrid of the two (repro.embed.sharded_sparse):
+                row-sharded tables *and* per-shard unique-id dedup with lazy
+                L2 decay, so per-device memory is O(vocab / n_model) and
+                update traffic is O(batch) simultaneously. Capacity overflow
+                on a shard falls back to that shard's dense update (exact).
 
 Which to pick: dense until the table update dominates the step (vocab around
 10^6 at CTR batch sizes), sparse while one device still holds the tables,
-sharded when it no longer does (Criteo-scale 10^8 rows and beyond).
+sharded/sharded_sparse when it no longer does (Criteo-scale 10^8 rows and
+beyond) — sharded_sparse whenever the batch touches a small fraction of each
+shard's rows, which is always true at production vocabs. See
+docs/architecture.md for the full decision table.
 
 Every placement yields the same ``TrainStepBundle`` contract consumed by
 ``train.loop.train_ctr``::
@@ -48,7 +57,7 @@ import jax
 from ..core import builders
 from ..core.builders import TRAIN_PATHS, TrainStepBundle
 
-PLACEMENTS = ("dense", "sparse", "sharded")
+PLACEMENTS = ("dense", "sparse", "sharded", "sharded_sparse")
 
 # core.build_train_step path name (TRAIN_PATHS) -> (placement, dense kernel)
 _PATH_TO_STORE = {
@@ -56,6 +65,7 @@ _PATH_TO_STORE = {
     "fused": ("dense", "fused"),
     "sparse": ("sparse", "auto"),
     "sharded": ("sharded", "auto"),
+    "sharded_sparse": ("sharded_sparse", "auto"),
 }
 
 
@@ -74,11 +84,13 @@ class EmbeddingStore:
                              f"expected one of {PLACEMENTS}")
 
     def describe(self) -> str:
-        if self.placement == "sharded":
+        if self.placement in ("sharded", "sharded_sparse"):
             from . import sharded as shard_lib
             mesh = self.mesh if self.mesh is not None else shard_lib.default_mesh()
-            return (f"sharded(rows over model={mesh.shape['model']}, "
-                    f"batch over data={mesh.shape['data']}, "
+            detail = ("per-shard unique-id update, "
+                      if self.placement == "sharded_sparse" else "")
+            return (f"{self.placement}(rows over model={mesh.shape['model']}, "
+                    f"batch over data={mesh.shape['data']}, {detail}"
                     f"{self.partition} partition)")
         if self.placement == "dense":
             return f"dense({self.kernel})"
@@ -134,14 +146,23 @@ class EmbeddingStore:
                 b1=b1, b2=b2, eps=eps)
             return TrainStepBundle(step, init, flush)
 
-        # sharded
+        # sharded / sharded_sparse
         from . import sharded as shard_lib
 
         mesh = self.mesh if self.mesh is not None else shard_lib.default_mesh()
-        step, init, flush, prepare, export = loop_lib.make_sharded_train_step(
-            cfg, hp, mesh, scheme=self.partition, r=r, zeta=zeta,
-            dense_tx=dense_tx, clip=clip_kind == "adaptive_column",
-            b1=b1, b2=b2, eps=eps)
+        if self.placement == "sharded_sparse":
+            step, init, flush, prepare, export = (
+                loop_lib.make_sharded_sparse_train_step(
+                    cfg, hp, mesh, scheme=self.partition, r=r, zeta=zeta,
+                    dense_tx=dense_tx, use_kernel=use_kernel,
+                    clip=clip_kind == "adaptive_column", b1=b1, b2=b2,
+                    eps=eps))
+        else:
+            step, init, flush, prepare, export = (
+                loop_lib.make_sharded_train_step(
+                    cfg, hp, mesh, scheme=self.partition, r=r, zeta=zeta,
+                    dense_tx=dense_tx, clip=clip_kind == "adaptive_column",
+                    b1=b1, b2=b2, eps=eps))
         return TrainStepBundle(step, init, flush, prepare, export)
 
 

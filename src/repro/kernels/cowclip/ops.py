@@ -12,6 +12,7 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from . import ref, sparse
 from .cowclip import cowclip_adam_update
@@ -49,19 +50,24 @@ def fused_cowclip_adam(
 def sparse_gather_catchup(
     w, m, v, last_step, uids, counts, step, *,
     lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8, use_kernel=True,
+    row_offset=0,
 ):
     """Gather unique rows + replay pending lazy-L2 decay (through step - 1).
 
     ``uids`` are the raw slot uids (pads out of range); remapping for the
-    kernel's index maps happens here. Returns f32 (w_rows, m_rows, v_rows).
+    kernel's index maps happens here. ``row_offset`` is the shard-offset
+    form: ``w``/``m``/``v``/``last_step`` are one row-shard and ``uids``
+    global ids of rows that shard owns. Returns f32 (w_rows, m_rows,
+    v_rows).
     """
     kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
     if not use_kernel:
         return ref.sparse_gather_catchup_reference(
-            w, m, v, last_step, uids, step, **kw)
+            w, m, v, last_step, uids, step, row_offset=row_offset, **kw)
     su = sparse.safe_uids(uids, counts)
     return sparse.sparse_gather_catchup(
-        w, m, v, last_step[su], su, step, interpret=not _on_tpu(), **kw)
+        w, m, v, last_step[su - row_offset], su, step,
+        row_offset=row_offset, interpret=not _on_tpu(), **kw)
 
 
 @partial(
@@ -73,24 +79,26 @@ def sparse_gather_catchup(
 def sparse_update_scatter(
     w, m, v, last_step, uids, counts, w_rows, g_rows, m_rows, v_rows, step, *,
     r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
-    use_kernel=True, clip=True,
+    use_kernel=True, clip=True, row_offset=0,
 ):
     """CowClip+L2+Adam on caught-up rows, scattered back into the tables.
 
     Returns (w, m, v, last_step); absent ids' rows are untouched (decay
-    stays pending in ``last_step``).
+    stays pending in ``last_step``). ``row_offset`` as in
+    ``sparse_gather_catchup``.
     """
     if not use_kernel:
         return ref.sparse_update_scatter_reference(
             w, m, v, last_step, uids, counts, w_rows, g_rows, m_rows, v_rows,
             step, r=r, zeta=zeta, lr=lr, l2=l2, b1=b1, b2=b2, eps=eps,
-            clip=clip)
+            clip=clip, row_offset=row_offset)
     su = sparse.safe_uids(uids, counts)
     w, m, v = sparse.sparse_update_scatter(
         w, m, v, su, counts, w_rows, g_rows, m_rows, v_rows, step,
         r=r, zeta=zeta, lr=lr, l2=l2, b1=b1, b2=b2, eps=eps, clip=clip,
-        interpret=not _on_tpu(),
+        row_offset=row_offset, interpret=not _on_tpu(),
     )
-    last_step = last_step.at[uids].set(
+    loc = jnp.where(counts > 0, uids - row_offset, w.shape[0])
+    last_step = last_step.at[loc].set(
         step.astype(last_step.dtype), mode="drop")
     return w, m, v, last_step

@@ -40,20 +40,28 @@ def cowclip_adam_reference(
 
 def sparse_gather_catchup_reference(
     w, m, v, last_step, uids, step, *,
-    lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
+    lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8, row_offset=0,
 ):
     """Gather unique rows and replay their pending decay-only steps.
 
     ``uids`` is [capacity] int32 (pad slots out of range — their gather
     clips to the last row and produces garbage that is masked downstream).
+    ``row_offset`` is subtracted from uids first: the shard-offset form
+    used when ``w`` is one row-shard of a partitioned table and ``uids``
+    are global ids. A pad uid minus the offset may land back in range (the
+    global ``vocab`` sentinel on a late shard) — harmless here, since a
+    pad slot's gathered rows are garbage under every convention and
+    callers mask them by ``counts``; only *scatters* must force pads out
+    of range, which ``sparse_update_scatter_reference`` does itself.
     Rows come out caught up **through step - 1**, i.e. as the dense path
     would see them at the start of step ``step``. Returns f32
     (w_rows, m_rows, v_rows).
     """
-    w_rows = w[uids]
-    m_rows = m[uids]
-    v_rows = v[uids]
-    ls = last_step[uids]
+    loc = uids - row_offset
+    w_rows = w[loc]
+    m_rows = m[loc]
+    v_rows = v[loc]
+    ls = last_step[loc]
     return decay_catchup_rows(
         w_rows, m_rows, v_rows, ls, step - 1,
         lr=lr, l2=l2, b1=b1, b2=b2, eps=eps,
@@ -63,13 +71,20 @@ def sparse_gather_catchup_reference(
 def sparse_update_scatter_reference(
     w, m, v, last_step, uids, counts, w_rows, g_rows, m_rows, v_rows, step, *,
     r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
-    clip=True,
+    clip=True, row_offset=0,
 ):
     """CowClip + coupled L2 + Adam on caught-up rows, scattered back.
 
     Pad slots carry out-of-range uids and are dropped by the scatter; their
-    row values never land. Returns (w, m, v, last_step) full tables.
+    row values never land. ``row_offset`` as in
+    ``sparse_gather_catchup_reference`` — pad uids must stay out of range
+    after subtraction, which the pad-slot masking here enforces regardless
+    (a pad slot is any slot with ``counts == 0``). Returns
+    (w, m, v, last_step) full tables.
     """
+    # pad slots (counts == 0) are forced out of range — with a row_offset
+    # the raw pad uid (vocab) minus the offset could otherwise land in range
+    loc = jnp.where(counts > 0, uids - row_offset, w.shape[0])
     g32 = g_rows.astype(jnp.float32)
     if clip:
         g32 = cowclip_rows(g32, w_rows, counts, r=r, zeta=zeta)
@@ -77,10 +92,10 @@ def sparse_update_scatter_reference(
         g32, w_rows, m_rows, v_rows, step,
         lr=lr, l2=l2, b1=b1, b2=b2, eps=eps,
     )
-    w = w.at[uids].set(w_new.astype(w.dtype), mode="drop")
-    m = m.at[uids].set(m_new.astype(m.dtype), mode="drop")
-    v = v.at[uids].set(v_new.astype(v.dtype), mode="drop")
-    last_step = last_step.at[uids].set(
+    w = w.at[loc].set(w_new.astype(w.dtype), mode="drop")
+    m = m.at[loc].set(m_new.astype(m.dtype), mode="drop")
+    v = v.at[loc].set(v_new.astype(v.dtype), mode="drop")
+    last_step = last_step.at[loc].set(
         step.astype(last_step.dtype), mode="drop")
     return w, m, v, last_step
 
@@ -88,13 +103,14 @@ def sparse_update_scatter_reference(
 def sparse_cowclip_adam_reference(
     w, m, v, last_step, uids, counts, g_rows, step, *,
     r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
+    row_offset=0,
 ):
     """Full sparse step oracle (gather -> catch-up -> clip -> Adam -> scatter)
     given the task-loss gradient on gathered rows. The per-step dense
     equivalent is ``cowclip_adam_reference`` over the whole table."""
-    kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+    kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps, row_offset=row_offset)
     w_rows, m_rows, v_rows = sparse_gather_catchup_reference(
         w, m, v, last_step, uids, step, **kw)
     return sparse_update_scatter_reference(
         w, m, v, last_step, uids, counts, w_rows, g_rows, m_rows, v_rows,
-        step, r=r, zeta=zeta, **kw)
+        step, r=r, zeta=zeta, clip=True, **kw)

@@ -34,6 +34,15 @@ Grid = one row per step: gathered rows are not contiguous, so blocks cannot
 span slots. ``dim`` (10 for CTR) under-fills the 128-wide lanes; at
 production scale the win is ending O(vocab) HBM streaming, not lane
 utilization. All math f32, matching ``ref.py`` bit-for-bit in op order.
+
+Shard-offset awareness: both kernels take a ``row_offset`` (second
+scalar-prefetch operand) subtracted from every uid inside the index maps,
+so a model-shard of a row-partitioned table (repro.embed.sharded_sparse)
+can feed *global* ids against its local ``[rows_per_shard, dim]`` block —
+the shard's base row never has to be materialized into the uid array.
+Offset-uid contract: after subtraction every *real* slot's row index must
+be in ``[0, rows)`` (guaranteed when the caller owns those ids); pad slots
+go through ``safe_uids`` first, which aliases them to a real (owned) slot.
 """
 
 from __future__ import annotations
@@ -62,9 +71,9 @@ def safe_uids(uids: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _catchup_kernel(uids_ref, w_ref, m_ref, v_ref, ls_ref, lim_ref,
+def _catchup_kernel(uids_ref, off_ref, w_ref, m_ref, v_ref, ls_ref, lim_ref,
                     w_out, m_out, v_out, *, lr, l2, b1, b2, eps):
-    del uids_ref  # consumed by the index maps
+    del uids_ref, off_ref  # consumed by the index maps
     w = w_ref[...].astype(jnp.float32)            # (1, dim)
     m = m_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
@@ -91,9 +100,9 @@ def _catchup_kernel(uids_ref, w_ref, m_ref, v_ref, ls_ref, lim_ref,
 
 
 def sparse_gather_catchup(
-    w: jnp.ndarray,           # [vocab, dim] table
-    m: jnp.ndarray,           # [vocab, dim] Adam first moment
-    v: jnp.ndarray,           # [vocab, dim] Adam second moment
+    w: jnp.ndarray,           # [rows, dim] table (or one shard of it)
+    m: jnp.ndarray,           # [rows, dim] Adam first moment
+    v: jnp.ndarray,           # [rows, dim] Adam second moment
     ls_rows: jnp.ndarray,     # [cap] int32 last_step gathered per slot
     uids: jnp.ndarray,        # [cap] int32 in-range slot uids (safe_uids)
     step: jnp.ndarray,        # scalar int32 t: catch rows up through t-1
@@ -103,19 +112,22 @@ def sparse_gather_catchup(
     b1: float = 0.9,
     b2: float = 0.999,
     eps: float = 1e-8,
+    row_offset=0,             # subtracted from uids: shard's first global row
     interpret: bool = False,
 ):
     """Fused gather + decay catch-up. Returns f32 (w_rows, m_rows, v_rows)."""
     cap = uids.shape[0]
     dim = w.shape[1]
     lim = jnp.full((cap,), step - 1, jnp.int32)
+    off = jnp.full((1,), row_offset, jnp.int32)
 
-    row_by_uid = pl.BlockSpec((1, dim), lambda i, uids_ref: (uids_ref[i], 0))
-    row_by_slot = pl.BlockSpec((1, dim), lambda i, uids_ref: (i, 0))
-    scalar_by_slot = pl.BlockSpec((1,), lambda i, uids_ref: (i,))
+    row_by_uid = pl.BlockSpec(
+        (1, dim), lambda i, uids_ref, off_ref: (uids_ref[i] - off_ref[0], 0))
+    row_by_slot = pl.BlockSpec((1, dim), lambda i, uids_ref, off_ref: (i, 0))
+    scalar_by_slot = pl.BlockSpec((1,), lambda i, uids_ref, off_ref: (i,))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(cap,),
         in_specs=[row_by_uid, row_by_uid, row_by_uid,
                   scalar_by_slot, scalar_by_slot],
@@ -128,7 +140,7 @@ def sparse_gather_catchup(
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((cap, dim), jnp.float32)] * 3,
         interpret=interpret,
-    )(uids, w, m, v, ls_rows, lim)
+    )(uids, off, w, m, v, ls_rows, lim)
 
 
 # ---------------------------------------------------------------------------
@@ -136,11 +148,11 @@ def sparse_gather_catchup(
 # ---------------------------------------------------------------------------
 
 
-def _update_kernel(uids_ref, bc_ref, w_tab_ref, m_tab_ref, v_tab_ref,
+def _update_kernel(uids_ref, off_ref, bc_ref, w_tab_ref, m_tab_ref, v_tab_ref,
                    wr_ref, gr_ref, cnt_ref, mr_ref, vr_ref,
                    w_out, m_out, v_out,
                    *, r, zeta, lr, l2, b1, b2, eps, do_clip):
-    del uids_ref, w_tab_ref, m_tab_ref, v_tab_ref  # alias/index-map only
+    del uids_ref, off_ref, w_tab_ref, m_tab_ref, v_tab_ref  # index-map only
     cnt = cnt_ref[0]
 
     @pl.when(cnt > 0.0)                            # pad slots write nothing
@@ -169,9 +181,9 @@ def _update_kernel(uids_ref, bc_ref, w_tab_ref, m_tab_ref, v_tab_ref,
 
 
 def sparse_update_scatter(
-    w: jnp.ndarray,           # [vocab, dim] table (donated, updated in place)
-    m: jnp.ndarray,           # [vocab, dim] Adam first moment (donated)
-    v: jnp.ndarray,           # [vocab, dim] Adam second moment (donated)
+    w: jnp.ndarray,           # [rows, dim] table or shard (donated, in place)
+    m: jnp.ndarray,           # [rows, dim] Adam first moment (donated)
+    v: jnp.ndarray,           # [rows, dim] Adam second moment (donated)
     uids: jnp.ndarray,        # [cap] int32 in-range slot uids (safe_uids)
     counts: jnp.ndarray,      # [cap] f32 per-slot batch counts (0 on pads)
     w_rows: jnp.ndarray,      # [cap, dim] caught-up rows (f32)
@@ -188,6 +200,7 @@ def sparse_update_scatter(
     b2: float = 0.999,
     eps: float = 1e-8,
     clip: bool = True,
+    row_offset=0,             # subtracted from uids: shard's first global row
     interpret: bool = False,
 ):
     """Fused CowClip+L2+Adam over unique rows, scattered into the tables
@@ -197,14 +210,16 @@ def sparse_update_scatter(
     dim = w.shape[1]
     t = step.astype(jnp.float32)
     bc = jnp.stack([1.0 / (1.0 - b1**t), 1.0 / (1.0 - b2**t)]).reshape(1, 2)
+    off = jnp.full((1,), row_offset, jnp.int32)
 
-    row_by_uid = pl.BlockSpec((1, dim), lambda i, uids_ref: (uids_ref[i], 0))
-    row_by_slot = pl.BlockSpec((1, dim), lambda i, uids_ref: (i, 0))
-    scalar_by_slot = pl.BlockSpec((1,), lambda i, uids_ref: (i,))
-    bc_block = pl.BlockSpec((1, 2), lambda i, uids_ref: (0, 0))
+    row_by_uid = pl.BlockSpec(
+        (1, dim), lambda i, uids_ref, off_ref: (uids_ref[i] - off_ref[0], 0))
+    row_by_slot = pl.BlockSpec((1, dim), lambda i, uids_ref, off_ref: (i, 0))
+    scalar_by_slot = pl.BlockSpec((1,), lambda i, uids_ref, off_ref: (i,))
+    bc_block = pl.BlockSpec((1, 2), lambda i, uids_ref, off_ref: (0, 0))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(cap,),
         in_specs=[bc_block, row_by_uid, row_by_uid, row_by_uid,
                   row_by_slot, row_by_slot, scalar_by_slot,
@@ -226,6 +241,7 @@ def sparse_update_scatter(
         ],
         # (w, m, v) table inputs alias the three outputs: untouched rows are
         # never DMA'd, so the update writes only O(n_unique) HBM traffic.
-        input_output_aliases={2: 0, 3: 1, 4: 2},
+        # Operand order: (uids, off, bc, w, m, v, ...) -> w/m/v at 3/4/5.
+        input_output_aliases={3: 0, 4: 1, 5: 2},
         interpret=interpret,
-    )(uids, bc, w, m, v, w_rows, g_rows, counts, m_rows, v_rows)
+    )(uids, off, bc, w, m, v, w_rows, g_rows, counts, m_rows, v_rows)

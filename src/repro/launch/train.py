@@ -17,6 +17,9 @@ Usage:
   # mesh-sharded embeddings on 8 virtual CPU devices (2-way data, 4-way row):
   PYTHONPATH=src python -m repro.launch.train --task ctr --placement sharded \
       --mesh 2,4 --host-devices 8 --batch 8192 --epochs 1
+  # the sharded+sparse hybrid (per-shard unique-id updates) on the same mesh:
+  PYTHONPATH=src python -m repro.launch.train --task ctr \
+      --placement sharded_sparse --mesh 2,4 --host-devices 8 --batch 8192
   PYTHONPATH=src python -m repro.launch.train --task lm --arch gemma3-12b \
       --reduced --steps 100
 """
@@ -39,6 +42,29 @@ from . import mesh as mesh_lib
 from .mesh import make_ctr_mesh, parse_mesh
 
 
+MESH_PLACEMENTS = ("sharded", "sharded_sparse")
+
+
+def resolve_placement(placement, sparse_flag, *,
+                      warn=print) -> "str | None":
+    """Combine ``--placement`` with the deprecated ``--sparse`` alias.
+
+    ``--sparse`` is exactly ``--placement sparse``; passing both with a
+    different placement is a hard error (the two knobs used to be able to
+    disagree silently — e.g. ``--sparse --placement sharded`` trained
+    sharded while cfg.sparse claimed otherwise). Documented in docs/cli.md.
+    """
+    if sparse_flag:
+        if placement is not None and placement != "sparse":
+            raise SystemExit(
+                f"--sparse conflicts with --placement {placement}: --sparse "
+                "is a deprecated alias for --placement sparse; drop one of "
+                "the two flags")
+        warn("[train] --sparse is deprecated; use --placement sparse")
+        return "sparse"
+    return placement
+
+
 def run_ctr(args) -> None:
     from ..embed import store_for
 
@@ -50,7 +76,7 @@ def run_ctr(args) -> None:
         ds = make_ctr_dataset(args.samples, vocabs, n_dense=4, zipf_a=1.1,
                               seed=args.seed)
     tr, te = ds.split(0.9)
-    placement = args.placement or ("sparse" if args.sparse else None)
+    placement = resolve_placement(args.placement, args.sparse)
     cfg = ctr_lib.CTRConfig(
         name=args.model, vocab_sizes=ds.vocab_sizes,
         n_dense=ds.dense.shape[1], emb_dim=args.emb_dim,
@@ -59,7 +85,7 @@ def run_ctr(args) -> None:
         placement=placement,
     )
     mesh = None
-    if placement == "sharded":
+    if placement in MESH_PLACEMENTS:
         mesh = make_ctr_mesh(*(parse_mesh(args.mesh) if args.mesh else (0, 0)))
     n_params = sum(
         int(np.prod(x.shape)) for x in jax.tree.leaves(
@@ -82,7 +108,7 @@ def run_ctr(args) -> None:
                                warmup_steps=warmup)
     res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
                     epochs=args.epochs, seed=args.seed, log_fn=print,
-                    step_bundle=bundle)
+                    step_bundle=bundle, max_steps=args.steps)
     print(f"[train] done: {res.steps} steps in {res.seconds:.1f}s "
           f"-> AUC {100*res.final_eval['auc']:.2f} "
           f"logloss {res.final_eval['logloss']:.4f}")
@@ -111,6 +137,8 @@ def run_lm(args) -> None:
           f"{lm.param_counts(cfg)['total']/1e6:.1f}M params, "
           f"mesh {dict(mesh.shape)}")
 
+    if args.steps is None:
+        args.steps = 100
     stream = make_lm_tokens(args.samples, cfg.vocab_size, seed=args.seed)
     seq, batch = args.seq, args.batch
     n_steps_epoch = len(stream) // (seq * batch)
@@ -183,19 +211,21 @@ def main():
     ap.add_argument("--base-l2", type=float, default=1e-5)
     ap.add_argument("--zeta", type=float, default=1e-5)
     ap.add_argument("--placement", default=None,
-                    choices=("substrate", "fused", "sparse", "sharded"),
+                    choices=("substrate", "fused", "sparse", "sharded",
+                             "sharded_sparse"),
                     help="embedding store placement (repro.embed); default "
-                         "substrate, or sparse when --sparse is set")
+                         "substrate. sharded_sparse = row-sharded tables "
+                         "with per-shard unique-id updates (docs/cli.md)")
     ap.add_argument("--sparse", action="store_true",
-                    help="shorthand for --placement sparse (unique-id gather "
-                         "-> fused CowClip/L2/Adam -> scatter, lazy L2 decay)")
+                    help="DEPRECATED alias for --placement sparse; errors "
+                         "if --placement names anything else")
     ap.add_argument("--unique-capacity", type=int, default=0,
                     help="padded per-field unique-id capacity; 0 = exact "
                          "min(batch, vocab) default")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
-                    help="mesh axes for --placement sharded, e.g. '2,4' = "
-                         "2-way batch split x 4-way table row-sharding; "
-                         "default (1, n_devices)")
+                    help="mesh axes for --placement sharded/sharded_sparse, "
+                         "e.g. '2,4' = 2-way batch split x 4-way table "
+                         "row-sharding; default (1, n_devices)")
     ap.add_argument("--partition", default="div", choices=("div", "mod"),
                     help="sharded row mapping: div = contiguous blocks, "
                          "mod = round-robin (balances Zipf-hot low ids)")
@@ -208,7 +238,10 @@ def main():
     ap.add_argument("--arch", default="gemma3-12b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="lm: number of train steps (default 100); ctr: "
+                         "optional hard cap on total steps (smoke runs, "
+                         "scripts/docs_check.sh); default uncapped")
     # common
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)

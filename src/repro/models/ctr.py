@@ -37,12 +37,15 @@ class CTRConfig:
     # stays available as the exactness oracle.
     sparse: bool = False
     # Padded capacity of the per-field unique-id set; <= 0 means the exact
-    # default min(batch, vocab_f). Smaller values bound memory but drop
-    # gradient contributions on overflow (see models/embedding.py).
+    # default min(batch, vocab_f) (per shard under the sharded_sparse
+    # placement: min(batch, rows_per_shard)). Smaller values bound memory
+    # but overflow: the sparse placement drops gradient contributions
+    # (see models/embedding.py), sharded_sparse falls back to the dense
+    # per-shard update for the overflowing shard (exact, slower).
     unique_capacity: int = 0
     # Embedding placement (repro.embed.EmbeddingStore): one of
-    # core.TRAIN_PATHS ("substrate" | "fused" | "sparse" | "sharded").
-    # None defers to the legacy ``sparse`` knob above.
+    # core.TRAIN_PATHS ("substrate" | "fused" | "sparse" | "sharded" |
+    # "sharded_sparse"). None defers to the legacy ``sparse`` knob above.
     placement: str | None = None
 
     @property

@@ -130,6 +130,41 @@ def batch_unique(
     return out
 
 
+def unique_owned_ids(
+    ids_col: jnp.ndarray,
+    owned: jnp.ndarray,
+    vocab: int,
+    capacity: int,
+):
+    """Dedup the subset of a batch column selected by ``owned``.
+
+    The per-shard variant of ``unique_ids``: non-owned ids are masked to the
+    ``vocab`` sentinel before the dedup, so the unique set covers only the
+    ids ``owned`` flags — the rows one model-shard is responsible for.
+    Because the sentinel itself occupies a slot when any id is masked, the
+    dedup runs at ``capacity + 1`` and the sentinel slot (always last — the
+    sentinel is the largest value) is dropped.
+
+    Returns ``(uids, counts, overflow)``:
+      uids:     [capacity] int32 distinct owned ids ascending; pad slots
+                hold ``vocab``.
+      counts:   [capacity] float32 batch occurrence counts (0 on pads).
+      overflow: bool scalar — more than ``capacity`` distinct owned ids in
+                the batch (the kept slots are then the ``capacity`` smallest;
+                callers must fall back to a dense update to stay exact).
+    """
+    masked = jnp.where(owned, ids_col, vocab)
+    uids, counts = jnp.unique(masked, size=capacity + 1, fill_value=vocab,
+                              return_counts=True)
+    real = uids < vocab
+    counts = jnp.where(real, counts, 0)
+    # slot `capacity` holding a real id means at least capacity+1 distinct
+    # owned ids were present — the dedup dropped some
+    overflow = uids[capacity] < vocab
+    return (uids[:capacity].astype(jnp.int32),
+            counts[:capacity].astype(jnp.float32), overflow)
+
+
 def gather_rows(tables: dict, uniq: dict) -> dict:
     """Gather each field's unique rows: ``{"field_i": [capacity_i, dim]}``.
 

@@ -225,6 +225,10 @@ def ctr_param_spec(path: str, shape: tuple, mesh: Mesh) -> P:
     name = path.split("/")[-1]
     if re.match(r"field_\d+$", name) and len(shape) == 2:
         return pick(shape, [("model", None), (None, None)], mesh)
+    # 1-D per-row state on a field table (the lazy-decay placements'
+    # last_step arrays) shards with the rows it annotates
+    if re.match(r"field_\d+$", name) and len(shape) == 1:
+        return pick(shape, [("model",), (None,)], mesh)
     return P(*([None] * len(shape)))
 
 

@@ -5,6 +5,7 @@ driver (single host; the distributed variant lives in repro/launch/train.py).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from functools import partial
 from typing import Callable, Optional
@@ -14,6 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import GradientTransformation, apply_updates
+
+logger = logging.getLogger(__name__)
 from ..data.synthetic import CTRDataset, iterate_batches
 from ..models import ctr
 from ..models import embedding as embedding_lib
@@ -231,10 +234,18 @@ def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         return {"embed": new_embed, "dense": new_dense}, new_state, {
             "loss": loss}
 
+    return step, init, _make_lazy_flush(adam_kw)
+
+
+def _make_lazy_flush(adam_kw: dict):
+    """The flush shared by every lazy-decay placement (sparse and
+    sharded_sparse): apply each row's pending decay-only steps through the
+    current step, then stamp ``last_step = step`` everywhere. Idempotent —
+    a second call replays zero iterations and rewrites identical values."""
+    from ..core import optim as optim_lib
+
     @jax.jit
     def flush(params, state):
-        """Apply every row's pending decay-only steps (through the current
-        step). After flush the (params, m, v) trees equal the dense path's."""
         caught = jax.tree.map(
             lambda w, m, v, ls: optim_lib.decay_catchup_rows(
                 w, m, v, ls, state["step"], **adam_kw),
@@ -248,7 +259,7 @@ def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         new_state = dict(state, m=new_m, v=new_v, last_step=new_ls)
         return dict(params, embed=new_embed), new_state
 
-    return step, init, flush
+    return flush
 
 
 def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
@@ -282,7 +293,6 @@ def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
 
     from ..core import builders as builders_lib
     from ..embed import sharded as shard_lib
-    from ..sharding.specs import infer_ctr_param_shardings
 
     if dense_tx is None:
         dense_tx = builders_lib.dense_tower_tx(hp, b1=b1, b2=b2, eps=eps)
@@ -295,11 +305,7 @@ def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
 
     EMB = P("model", None)   # prefix spec: broadcasts over the embed tree
     REP = P()
-
-    def prepare(params):
-        params = dict(params,
-                      embed=shard_lib.pad_embed_tree(params["embed"], plans))
-        return jax.device_put(params, infer_ctr_param_shardings(params, mesh))
+    prepare, export = shard_lib.make_prepare_export(plans, mesh)
 
     def init(params):
         def zeros_like_placed(w):
@@ -315,37 +321,11 @@ def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
     def local_step(embed_sh, m_sh, v_sh, dense_params, t, ids, feats, labels):
         # ids/feats/labels are this data-slice's batch shard, replicated
         # along "model"; embed/m/v are this model-slice's table rows,
-        # replicated along "data".
-        b_global = ids.shape[0] * n_data
-
-        def partial_lookup(tables):
-            cols = [shard_lib.lookup_partial(
-                        tables[f"field_{i}"], ids[:, i], plans[f"field_{i}"])
-                    for i in range(n_fields)]
-            return jnp.stack(cols, axis=1)               # [b_loc, F, dim]
-
-        emb = jax.lax.psum(partial_lookup(embed_sh["fm"]), "model")
-        lin_emb = (jax.lax.psum(partial_lookup(embed_sh["lin"]), "model")
-                   if "lin" in embed_sh else None)
-
-        # Differentiate w.r.t. the *assembled* embeddings (no collectives
-        # inside the grad), then scatter the cotangent onto local rows
-        # explicitly — the transpose of the masked lookup.
-        def loss_fn(emb_args, dense_p):
-            e, le = emb_args
-            logits = ctr._forward_from_emb(dense_p, cfg, e, le, feats)
-            return jnp.sum(jax.nn.softplus(logits) - labels * logits) / b_global
-
-        if lin_emb is None:
-            loss_loc, ((g_emb, _), g_dense) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1))((emb, None), dense_params)
-            g_lin = None
-        else:
-            loss_loc, ((g_emb, g_lin), g_dense) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1))((emb, lin_emb), dense_params)
-
-        loss = jax.lax.psum(loss_loc, "data")
-        g_dense = jax.lax.psum(g_dense, "data")
+        # replicated along "data". Gradients come back w.r.t. the assembled
+        # embeddings; the scatter onto local rows (the transpose of the
+        # masked lookup) is explicit via rowgrad_partial below.
+        loss, g_emb, g_lin, g_dense = shard_lib.batch_forward_backward(
+            cfg, plans, embed_sh, dense_params, ids, feats, labels, n_data)
 
         new_w = {g: {} for g in embed_sh}
         new_m = {g: {} for g in embed_sh}
@@ -405,13 +385,205 @@ def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         eagerly on their shard, exactly like the dense path)."""
         return params, state
 
-    def export(params):
-        """Strip pad rows: back to canonical [vocab, dim] tables, logical
-        row order — interchangeable with every other placement's params."""
-        return dict(params,
-                    embed=shard_lib.unpad_embed_tree(params["embed"], plans))
-
     return step, init, flush, prepare, export
+
+
+def _warn_overflow(n, t):
+    """Host-side warning for sharded_sparse capacity-overflow fallbacks
+    (jax.debug.callback target — fires only on overflow steps). Warnings go
+    through ``logging`` (stderr by default), never stdout: benchmark and
+    test drivers parse stdout."""
+    logger.warning(
+        "[sharded_sparse] unique capacity overflow on %d field-shard(s) at "
+        "step %d; dense per-shard fallback (exact, but O(rows/shard) for "
+        "those shards)", int(n), int(t))
+
+
+def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
+                                   scheme: str = "div", r: float = 1.0,
+                                   zeta: float = 1e-5, dense_tx=None,
+                                   use_kernel: bool = False,
+                                   clip: bool = True, b1: float = 0.9,
+                                   b2: float = 0.999, eps: float = 1e-8):
+    """The sharded+sparse hybrid train step: tables row-sharded over
+    ``"model"`` like ``make_sharded_train_step``, but each shard's optimizer
+    update runs only on the batch ids it owns — per-shard unique-id dedup
+    of the all-gathered batch ids (``embed.sharded_sparse.
+    owned_unique_local``, capacity O(batch) per shard, inside the
+    shard_map), gather + lazy-L2-decay catch-up via per-row ``last_step``,
+    fused
+    CowClip/L2/Adam on the rows, scatter back. Memory scales as
+    O(vocab / n_model) per device *and* update traffic as O(batch) — the
+    first placement that does both (the ROADMAP hybrid).
+
+    Forward lookup and row-grad/count assembly reuse the sharded placement's
+    masked-psum blocks over "model"/"data" unchanged; the update itself is
+    row-local and collective-free on both branches. A shard whose distinct
+    owned ids exceed the capacity (only possible when
+    ``cfg.unique_capacity`` caps it below the exact default) falls back to
+    the dense per-shard update for that step — logged via ``jax.debug``
+    and counted in ``aux["overflow_shards"]`` — so the hybrid matches the
+    dense oracle even through overflow.
+
+    Returns ``(step, init, flush, prepare, export)``: ``prepare``/``export``
+    are the sharded placement's pad/unpad + device_put; ``flush`` forces the
+    decay catch-up of every pending row (required before eval/checkpoint,
+    idempotent).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..core import builders as builders_lib
+    from ..embed import sharded as shard_lib
+    from ..embed import sharded_sparse as hybrid_lib
+
+    if dense_tx is None:
+        dense_tx = builders_lib.dense_tower_tx(hp, b1=b1, b2=b2, eps=eps)
+    n_data = mesh.shape["data"]
+    n_model = mesh.shape["model"]
+    plans = shard_lib.make_plans(cfg.vocab_sizes, n_model, scheme)
+    adam_kw = dict(lr=hp.emb_lr, l2=hp.emb_l2, b1=b1, b2=b2, eps=eps)
+    upd_kw = dict(clip=clip, r=r, zeta=zeta, **adam_kw)
+    interpret = jax.default_backend() != "tpu"
+    n_fields = cfg.n_fields
+
+    EMB = P("model", None)   # prefix spec: broadcasts over the embed tree
+    LS = P("model")          # 1-D last_step leaves, rows over "model"
+    REP = P()
+    prepare, export = shard_lib.make_prepare_export(plans, mesh)
+
+    def init(params):
+        def zeros_like_placed(w):
+            return jax.device_put(jnp.zeros(w.shape, w.dtype), w.sharding)
+
+        last_step = jax.tree.map(
+            lambda w: jax.device_put(
+                jnp.zeros((w.shape[0],), jnp.int32),
+                NamedSharding(mesh, LS)),
+            params["embed"])
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros_like_placed, params["embed"]),
+            "v": jax.tree.map(zeros_like_placed, params["embed"]),
+            "last_step": last_step,
+            "dense": dense_tx.init(params["dense"]),
+        }
+
+    def local_step(embed_sh, m_sh, v_sh, ls_sh, dense_params, t,
+                   ids, feats, labels):
+        # embed/m/v/ls are this model-slice's rows; ids/feats/labels this
+        # data-slice's batch shard, replicated along "model".
+        b_global = ids.shape[0] * n_data
+
+        # per-shard unique-id dedup of the global batch: all-gather the
+        # int32 ids over "data" (a few KB) and dedup the owned subset per
+        # device — every data slice of a shard derives identical slots.
+        # A field whose capacity equals the exact default can never
+        # overflow; its fallback machinery (the per-field counts psum and
+        # both cond branches) is dropped at trace time.
+        gids = jax.lax.all_gather(ids, "data", axis=0, tiled=True)
+        dedup = {}
+        for i in range(n_fields):
+            f = f"field_{i}"
+            cap = hybrid_lib.shard_capacity(
+                plans[f], b_global, cfg.unique_capacity)
+            can_overflow = cap < min(b_global, plans[f].rows_per_shard)
+            uloc, cnts, ovf = hybrid_lib.owned_unique_local(
+                gids[:, i], plans[f], cap)
+            dedup[f] = (uloc, cnts, ovf if can_overflow else False)
+        n_overflow = jax.lax.psum(
+            sum(jnp.sum(jnp.asarray(d[2]).astype(jnp.int32))
+                for d in dedup.values()),
+            "model")
+
+        # phase 1: catch up the rows the forward will read (all rows of a
+        # shard on its overflow-fallback steps)
+        fwd = {g: {} for g in embed_sh}
+        base_m = {g: {} for g in embed_sh}
+        base_v = {g: {} for g in embed_sh}
+        rows_c = {g: {} for g in embed_sh}
+        for i in range(n_fields):
+            f = f"field_{i}"
+            uloc, cnts, ovf = dedup[f]
+            for group in embed_sh:
+                fwd[group][f], base_m[group][f], base_v[group][f], \
+                    *rows_c[group][f] = hybrid_lib.catchup_phase(
+                        embed_sh[group][f], m_sh[group][f], v_sh[group][f],
+                        ls_sh[group][f], uloc, cnts, ovf, t,
+                        use_kernel=use_kernel, interpret=interpret, **adam_kw)
+
+        loss, g_emb, g_lin, g_dense = shard_lib.batch_forward_backward(
+            cfg, plans, fwd, dense_params, ids, feats, labels, n_data)
+
+        # phase 2: row update on the touched slots (dense fallback on
+        # overflow), with row grads/counts psum'd over "data" as usual
+        new_w = {g: {} for g in embed_sh}
+        new_m = {g: {} for g in embed_sh}
+        new_v = {g: {} for g in embed_sh}
+        new_ls = {g: {} for g in embed_sh}
+        for i in range(n_fields):
+            f = f"field_{i}"
+            plan = plans[f]
+            uloc, cnts, ovf = dedup[f]
+            cnt_full = (jax.lax.psum(
+                shard_lib.counts_partial(ids[:, i], plan), "data")
+                if ovf is not False else None)
+            for group, g_batch in (("fm", g_emb), ("lin", g_lin)):
+                if group not in embed_sh:
+                    continue
+                g_full = jax.lax.psum(
+                    shard_lib.rowgrad_partial(g_batch[:, i, :], ids[:, i],
+                                              plan), "data")
+                (new_w[group][f], new_m[group][f], new_v[group][f],
+                 new_ls[group][f]) = hybrid_lib.update_phase(
+                    fwd[group][f], base_m[group][f], base_v[group][f],
+                    ls_sh[group][f], *rows_c[group][f], uloc, cnts, ovf,
+                    g_full, cnt_full, t, use_kernel=use_kernel,
+                    interpret=interpret, **upd_kw)
+        return new_w, new_m, new_v, new_ls, g_dense, loss, n_overflow
+
+    # check_rep=False: the lazy-decay catch-up is a while loop (traced trip
+    # count) inside lax.cond, for which jax 0.4.x's shard_map replication
+    # checker has no rule; the collectives here are the same psums as the
+    # dense sharded step, just outside the conds.
+    smapped = shard_lib.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(EMB, EMB, EMB, LS, REP, REP,
+                  P("data", None), P("data", None), P("data")),
+        out_specs=(EMB, EMB, EMB, LS, REP, REP, REP),
+        check_rep=False,
+    )
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, state, batch):
+        ids = batch["ids"]
+        if ids.shape[0] % n_data:
+            raise ValueError(
+                f"batch {ids.shape[0]} not divisible by data axis {n_data}")
+        t = state["step"] + 1
+        w_p = shard_lib.to_physical(params["embed"], plans)
+        m_p = shard_lib.to_physical(state["m"], plans)
+        v_p = shard_lib.to_physical(state["v"], plans)
+        ls_p = shard_lib.to_physical(state["last_step"], plans)
+        new_w, new_m, new_v, new_ls, g_dense, loss, n_overflow = smapped(
+            w_p, m_p, v_p, ls_p, params["dense"], t,
+            ids, batch["dense"], batch["labels"])
+        jax.lax.cond(
+            n_overflow > 0,
+            lambda n, tt: jax.debug.callback(_warn_overflow, n, tt),
+            lambda n, tt: None, n_overflow, t)
+        new_embed = shard_lib.to_logical(new_w, plans)
+        d_updates, d_state = dense_tx.update(
+            g_dense, state["dense"], params["dense"])
+        new_dense = jax.tree.map(
+            lambda p, u: p + u.astype(p.dtype), params["dense"], d_updates)
+        new_state = {"step": t, "m": shard_lib.to_logical(new_m, plans),
+                     "v": shard_lib.to_logical(new_v, plans),
+                     "last_step": shard_lib.to_logical(new_ls, plans),
+                     "dense": d_state}
+        return {"embed": new_embed, "dense": new_dense}, new_state, {
+            "loss": loss, "overflow_shards": n_overflow}
+
+    return step, init, _make_lazy_flush(adam_kw), prepare, export
 
 
 def make_eval_fn(cfg: ctr.CTRConfig):
@@ -459,6 +631,7 @@ def train_ctr(
     eval_every_epoch: bool = True,
     log_fn: Optional[Callable[[str], None]] = None,
     step_bundle=None,
+    max_steps: Optional[int] = None,
 ) -> TrainResult:
     """Epoch driver. By default steps through the composable-optimizer path
     (``tx``); pass a ``core.builders.TrainStepBundle`` (any
@@ -466,7 +639,8 @@ def train_ctr(
     (step, init, flush, prepare) bundle instead — ``prepare`` lays params
     out for the placement once (the sharded store pads tables and shards
     rows over the mesh), and ``flush`` runs before every eval so
-    lazily-decayed params are exact.
+    lazily-decayed params are exact. ``max_steps`` hard-caps the total step
+    count across epochs (smoke runs; the CLI's ``--steps``).
     """
     params = ctr.init(jax.random.key(seed), cfg)
     if step_bundle is not None:
@@ -483,10 +657,14 @@ def train_ctr(
     n_steps = 0
     t0 = time.perf_counter()
     for epoch in range(epochs):
+        if max_steps is not None and n_steps >= max_steps:
+            break
         for b in iterate_batches(train_ds, batch_size, seed=seed + epoch):
             batch = {k: jnp.asarray(v) for k, v in b.items()}
             params, opt_state, aux = step_fn(params, opt_state, batch)
             n_steps += 1
+            if max_steps is not None and n_steps >= max_steps:
+                break
         if eval_every_epoch and test_ds is not None:
             if flush is not None:
                 params, opt_state = flush(params, opt_state)

@@ -1,11 +1,14 @@
-"""Multi-device exactness driver for the sharded embedding placement.
+"""Multi-device exactness driver for the sharded embedding placements
+(dense-per-shard ``sharded`` and per-shard-unique ``sharded_sparse``).
 
-Run as a script in its own subprocess (tests/test_sharded_embedding.py does)
-because the virtual-device flag must be set before jax initializes; the
-main suite keeps the plain 1-device backend. Each case trains the same
-deepfm/dcnv2 config through the single-device dense substrate chain and the
-mesh-sharded shard_map step, then reports max param error, AUC on a held-out
-set for both, and the last-step loss gap — one JSON line per case.
+Run as a script in its own subprocess (tests/test_sharded_embedding.py and
+tests/test_sharded_sparse.py do) because the virtual-device flag must be set
+before jax initializes; the main suite keeps the plain 1-device backend.
+Each case trains the same deepfm/dcnv2 config through the single-device
+dense substrate chain and the mesh placement under test, then reports max
+param error, AUC on a held-out set for both, the last-step loss gap, and
+(for the hybrid) the number of capacity-overflow fallback steps — one JSON
+line per case.
 """
 
 import os
@@ -25,20 +28,24 @@ N_STEPS = 5
 BATCH = 32
 
 
-def _batches(n_steps, batch, seed, one_shard_of=0):
+def _batches(n_steps, batch, seed, one_shard_of=0, widen_after=0):
     """Duplicate-heavy batches; ``one_shard_of=M`` keeps every id inside
-    shard 0 of an M-way div partition (id < ceil(vocab/M) per field)."""
+    shard 0 of an M-way div partition (id < ceil(vocab/M) per field);
+    ``widen_after=k`` starts field 0 on a 2-id pool and widens it to 5 ids
+    from step k on (the hybrid's mid-run capacity-overflow trigger)."""
     import jax.numpy as jnp
 
     rng = np.random.default_rng(seed)
-    for _ in range(n_steps):
+    for step_i in range(n_steps):
         if one_shard_of:
             his = [max(1, -(-v // one_shard_of)) for v in VOCABS]
             ids = np.stack([rng.integers(0, hi, size=batch) for hi in his],
                            axis=1).astype(np.int32)
         else:
+            pool0 = ([1, 50] if widen_after and step_i < widen_after
+                     else [1, 2, 3, 50, 51])
             ids = np.stack([
-                rng.choice([1, 2, 3, 50, 51], size=batch),
+                rng.choice(pool0, size=batch),
                 rng.integers(0, 13, size=batch),
                 rng.choice([0, 4], size=batch),
             ], axis=1).astype(np.int32)
@@ -49,18 +56,19 @@ def _batches(n_steps, batch, seed, one_shard_of=0):
         }
 
 
-def run_case(name, mesh_shape, scheme, model="deepfm", one_shard=False):
+def run_case(name, mesh_shape, scheme, model="deepfm", one_shard=False,
+             placement="sharded", unique_capacity=0, widen_after=0):
     import jax
     import jax.numpy as jnp
 
     from repro.core import build_optimizer, build_train_step, scale_hyperparams
     from repro.data.synthetic import make_ctr_dataset
-    from repro.embed import sharded as shard_lib
     from repro.models import ctr
     from repro.train.loop import make_eval_fn, make_train_step
 
     cfg = ctr.CTRConfig(name=model, vocab_sizes=VOCABS, n_dense=3,
-                        emb_dim=8, mlp_dims=(16, 16, 16), emb_sigma=1e-2)
+                        emb_dim=8, mlp_dims=(16, 16, 16), emb_sigma=1e-2,
+                        unique_capacity=unique_capacity)
     hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-3,
                            base_batch=64, batch_size=64, base_dense_lr=2e-3)
     params0 = ctr.init(jax.random.key(0), cfg)
@@ -71,28 +79,33 @@ def run_case(name, mesh_shape, scheme, model="deepfm", one_shard=False):
     dparams = jax.tree.map(jnp.copy, params0)
 
     mesh = jax.make_mesh(mesh_shape, ("data", "model"))
-    bundle = build_train_step(cfg, hp, path="sharded", mesh=mesh,
+    bundle = build_train_step(cfg, hp, path=placement, mesh=mesh,
                               partition=scheme, warmup_steps=0)
     sparams = bundle.prepare(jax.tree.map(jnp.copy, params0))
     sstate = bundle.init(sparams)
 
     loss_err = 0.0
+    overflow_steps = 0
     gen = _batches(N_STEPS, BATCH, seed=1,
-                   one_shard_of=mesh_shape[1] if one_shard else 0)
+                   one_shard_of=mesh_shape[1] if one_shard else 0,
+                   widen_after=widen_after)
     for b in gen:
         dparams, dstate, da = dstep(dparams, dstate, dict(b))
         sparams, sstate, sa = bundle.step(sparams, sstate, dict(b))
         loss_err = max(loss_err, abs(float(da["loss"]) - float(sa["loss"])))
+        if int(sa.get("overflow_shards", 0)):
+            overflow_steps += 1
     sparams, sstate = bundle.flush(sparams, sstate)
 
-    plans = shard_lib.make_plans(cfg.vocab_sizes, mesh.shape["model"], scheme)
-    s_embed = shard_lib.unpad_embed_tree(sparams["embed"], plans)
+    exported = bundle.export(sparams)
     embed_err = max(
         float(jnp.max(jnp.abs(a - b))) for a, b in
-        zip(jax.tree.leaves(dparams["embed"]), jax.tree.leaves(s_embed)))
+        zip(jax.tree.leaves(dparams["embed"]),
+            jax.tree.leaves(exported["embed"])))
     dense_err = max(
         float(jnp.max(jnp.abs(a - b))) for a, b in
-        zip(jax.tree.leaves(dparams["dense"]), jax.tree.leaves(sparams["dense"])))
+        zip(jax.tree.leaves(dparams["dense"]),
+            jax.tree.leaves(exported["dense"])))
 
     eval_ds = make_ctr_dataset(2000, VOCABS, n_dense=3, zipf_a=1.1, seed=7)
     eval_fn = make_eval_fn(cfg)
@@ -100,7 +113,9 @@ def run_case(name, mesh_shape, scheme, model="deepfm", one_shard=False):
     auc_sharded = eval_fn(sparams, eval_ds)["auc"]
 
     return {"name": name, "mesh": list(mesh_shape), "scheme": scheme,
-            "model": model, "one_shard": one_shard,
+            "model": model, "one_shard": one_shard, "placement": placement,
+            "unique_capacity": unique_capacity,
+            "overflow_steps": overflow_steps,
             "embed_err": embed_err, "dense_err": dense_err,
             "loss_err": loss_err,
             "auc_dense": auc_dense, "auc_sharded": auc_sharded}
@@ -111,6 +126,22 @@ CASES = {
     "8x1_div": dict(mesh_shape=(8, 1), scheme="div"),
     "2x4_mod": dict(mesh_shape=(2, 4), scheme="mod", model="dcnv2"),
     "2x4_one_shard": dict(mesh_shape=(2, 4), scheme="div", one_shard=True),
+    # the sharded+sparse hybrid against the same dense oracle; the overflow
+    # case caps per-shard unique capacity at 2 while field 0's pool widens
+    # from 2 to 5 ids at step 2, so shard 0 (ids 1,2,3 under div) overflows
+    # mid-run and must take the dense fallback
+    "hybrid_2x4_div": dict(mesh_shape=(2, 4), scheme="div",
+                           placement="sharded_sparse"),
+    "hybrid_8x1_div": dict(mesh_shape=(8, 1), scheme="div",
+                           placement="sharded_sparse"),
+    "hybrid_2x4_mod": dict(mesh_shape=(2, 4), scheme="mod", model="dcnv2",
+                           placement="sharded_sparse"),
+    "hybrid_2x4_one_shard": dict(mesh_shape=(2, 4), scheme="div",
+                                 one_shard=True,
+                                 placement="sharded_sparse"),
+    "hybrid_2x4_overflow": dict(mesh_shape=(2, 4), scheme="div",
+                                placement="sharded_sparse",
+                                unique_capacity=2, widen_after=2),
 }
 
 

@@ -175,6 +175,26 @@ def test_sharded_export_strips_padding_and_restores(tmp_path):
     assert dense_bundle.export(params0) is params0
 
 
+def test_train_ctr_through_sharded_sparse_bundle_1x1():
+    """End-to-end epoch driver through the hybrid placement on the host
+    mesh: train_ctr's pre-eval flush settles the lazy decay, the returned
+    state is fully caught up, and one more flush is a bitwise no-op."""
+    cfg = _cfg(placement="sharded_sparse")
+    ds = make_ctr_dataset(1500, VOCABS, n_dense=3, zipf_a=1.2, seed=6)
+    tr, te = ds.split(0.9)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bundle = build_train_step(cfg, _hp(), mesh=mesh)
+    res = train_ctr(cfg, None, tr, te, batch_size=128, epochs=1, seed=2,
+                    step_bundle=bundle)
+    assert np.isfinite(res.final_eval["logloss"])
+    assert 0.0 <= res.final_eval["auc"] <= 1.0
+    p2, s2 = bundle.flush(res.params, res.opt_state)
+    _assert_trees_identical(res.params, p2)
+    _assert_trees_identical(res.opt_state, s2)
+    for ls in jax.tree.leaves(res.opt_state["last_step"]):
+        assert (np.asarray(ls) == int(res.opt_state["step"])).all()
+
+
 def test_train_ctr_through_sharded_bundle_1x1():
     """End-to-end epoch driver through the sharded placement on the host
     mesh: prepare runs once, eval sees padded tables, metrics are sane."""

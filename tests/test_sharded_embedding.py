@@ -223,13 +223,16 @@ def test_sharded_step_rejects_odd_batch():
 # ---------------------------------------------------------------------------
 
 
+CASES = ["2x4_div", "8x1_div", "2x4_mod", "2x4_one_shard"]
+
+
 @pytest.fixture(scope="module")
 def exactness_records():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)   # the driver sets its own 8-device flag
     script = os.path.join(REPO, "tests", "sharded_exactness_main.py")
-    proc = subprocess.run([sys.executable, script], env=env,
+    proc = subprocess.run([sys.executable, script] + CASES, env=env,
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
     recs = [json.loads(line) for line in proc.stdout.strip().splitlines()]
