@@ -179,22 +179,41 @@ def sparse_embedding_bench(
     return rows
 
 
-def _time_bundle_steps(step_fn, params, state, batch_data, n=3):
-    """Average step time (us) of a jit'd bundle step, threading the donated
-    (params, state) through; first call compiles and warms."""
+def _time_bundle_steps(step_fn, params, state, batch_data, n=3, reps=3):
+    """Step time (us) of a jit'd bundle step, threading the donated
+    (params, state) through; first call compiles and warms. Min over
+    ``reps`` back-to-back n-step windows — contention on the shared
+    container only ever inflates a window."""
     params, state, _ = step_fn(params, state, dict(batch_data))
     jax.block_until_ready(params)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        params, state, _ = step_fn(params, state, dict(batch_data))
-    jax.block_until_ready(params)
-    return 1e6 * (time.perf_counter() - t0) / n
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            params, state, _ = step_fn(params, state, dict(batch_data))
+        jax.block_until_ready(params)
+        best = min(best, 1e6 * (time.perf_counter() - t0) / n)
+    return best
+
+
+def _zipf_case_rows(rng, vocab: int, n: int):
+    """The Zipf id/dense/label recipe every deepfm bench grid draws from
+    (a change here moves the sharded, hybrid, and engine benches together,
+    keeping their cross-bench comparisons in docs/benchmarks.md honest)."""
+    import numpy as np
+
+    ids = np.stack([
+        np.minimum(rng.zipf(1.2, size=n) - 1, vocab - 1),
+        rng.integers(0, 10_000, size=n),
+    ], axis=1).astype(np.int32)
+    dense = rng.normal(size=(n, 4)).astype(np.float32)
+    labels = (rng.random(n) < 0.3).astype(np.float32)
+    return ids, dense, labels
 
 
 def _sharded_bench_case(vocab: int, batch: int):
-    """The deepfm config + Zipf batch shared by the sharded and hybrid
-    benches (a change to the timing grid must hit both, or their
-    cross-bench comparison in docs/benchmarks.md skews)."""
+    """The deepfm config + Zipf batch shared by the sharded, hybrid, and
+    engine benches."""
     import numpy as np
 
     from repro.core import scale_hyperparams
@@ -206,15 +225,12 @@ def _sharded_bench_case(vocab: int, batch: int):
     hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-5,
                            base_batch=batch, batch_size=batch,
                            base_dense_lr=2e-3)
-    rng = np.random.default_rng(vocab)
-    ids = np.stack([
-        np.minimum(rng.zipf(1.2, size=batch) - 1, vocab - 1),
-        rng.integers(0, 10_000, size=batch),
-    ], axis=1).astype(np.int32)
+    ids, dense, labels = _zipf_case_rows(
+        np.random.default_rng(vocab), vocab, batch)
     batch_data = {
         "ids": jnp.asarray(ids),
-        "dense": jnp.asarray(rng.normal(size=(batch, 4)).astype(np.float32)),
-        "labels": jnp.asarray((rng.random(batch) < 0.3).astype(np.float32)),
+        "dense": jnp.asarray(dense),
+        "labels": jnp.asarray(labels),
     }
     return cfg, hp, batch_data
 
@@ -347,6 +363,22 @@ def hybrid_embedding_bench(
                 total += len(groups) * rows * 4 * 2       # last_step
         return total
 
+    def grad_assembly_bytes(cfg, placement):
+        """Analytic row-gradient materialization per step, all shards: the
+        f32 array each (field, group, device) segment-sums the embedding
+        cotangent into and psums over "data". ``sharded`` (and the hybrid
+        before the slot-level rowgrad) materializes the full
+        [rows_per_shard, dim]; the hybrid now only its [capacity, dim]
+        slot set — O(batch) instead of O(vocab / n_model)."""
+        groups = [cfg.emb_dim, 1]
+        total = 0
+        for v in cfg.vocab_sizes:
+            plan = RowShardPlan(v, n_model)
+            rows = (plan.rows_per_shard if placement == "sharded"
+                    else shard_capacity(plan, batch))
+            total += n_model * sum(rows * d * 4 for d in groups)
+        return total
+
     records, rows = [], []
     for vocab in vocabs:
         cfg, hp, batch_data = _sharded_bench_case(vocab, batch)
@@ -364,7 +396,9 @@ def hybrid_embedding_bench(
             rec = {"vocab": vocab, "batch": batch, "mesh_data": 1,
                    "mesh_model": n_model, "placement": placement,
                    "step_us": us,
-                   "update_bytes": update_bytes(cfg, placement)}
+                   "update_bytes": update_bytes(cfg, placement),
+                   "grad_assembly_bytes": grad_assembly_bytes(cfg,
+                                                              placement)}
             records.append(rec)
             rows.append(_csv(
                 f"hybrid_embed/v{vocab}/{placement}", us,
@@ -379,8 +413,190 @@ def hybrid_embedding_bench(
     with open(out_path, "w") as f:
         json.dump({"emb_dim": 10, "batch": batch, "backend":
                    jax.default_backend(), "n_devices": jax.device_count(),
+                   # marks results produced after the staged dedup (unique
+                   # ids all-gathered instead of the raw batch) and the
+                   # slot-level O(capacity) row-grad assembly landed
+                   "dedup": "staged_unique_allgather+slot_rowgrad",
                    "records": records}, f, indent=2)
     print(f"[hybrid_embedding_bench] wrote {out_path}")
+    return rows
+
+
+def _engine_bench_dataset(vocab: int, n_rows: int):
+    """The shared Zipf recipe (``_zipf_case_rows``) as a CTRDataset the
+    engine's prefetcher can chunk."""
+    import numpy as np
+
+    from repro.data.synthetic import CTRDataset
+
+    ids, dense, labels = _zipf_case_rows(
+        np.random.default_rng(vocab), vocab, n_rows)
+    return CTRDataset(ids, dense, labels, (vocab, 10_000))
+
+
+# Engines must be timed at MATCHED step counts: the sparse-family step's
+# lazy-decay catch-up replays each gathered row's pending decay, so its
+# cost grows with the optimizer step t early in training (a first-touch id
+# at step t replays t iterations) — timing one engine at t~8 against the
+# other at t~48 would misattribute that growth to the engine. Each config
+# is timed as the MIN over _N_REPS back-to-back windows: contention on the
+# shared CI container only ever inflates a window, never deflates it.
+_N_WARM_STEPS = 16
+_N_TIMED_STEPS = 16
+_N_REPS = 3
+
+
+def _time_eager_steps(bundle, params, state, ds, batch,
+                      n_warm=_N_WARM_STEPS, n_timed=_N_TIMED_STEPS,
+                      reps=_N_REPS):
+    """us/step of the eager loop exactly as train_ctr runs it: host batch
+    slice + blocking jnp.asarray + one jit dispatch per step."""
+    from repro.data.synthetic import iterate_batches
+
+    it = iterate_batches(ds, batch, seed=0)
+    for _ in range(n_warm):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, state, _ = bundle.step(params, state, b)
+    jax.block_until_ready(params)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(n_timed):
+            b = {k: jnp.asarray(v) for k, v in next(it).items()}
+            params, state, _ = bundle.step(params, state, b)
+        jax.block_until_ready(params)
+        best = min(best, 1e6 * (time.perf_counter() - t0) / n_timed)
+    return best
+
+
+def _time_scan_steps(bundle, params, state, ds, batch, k,
+                     n_warm=_N_WARM_STEPS, n_timed=_N_TIMED_STEPS,
+                     reps=_N_REPS):
+    """us/step of the scan engine: background-prefetched [k, batch, ...]
+    chunks through the donated-carry chunk runner, warmed/timed over the
+    same step counts as the eager loop."""
+    from repro.data import prefetch as prefetch_lib
+    from repro.train import engine as engine_lib
+
+    n_chunks_warm = -(-n_warm // k)
+    n_chunks_rep = -(-n_timed // k)
+    runner = engine_lib.make_chunk_runner(bundle.scan_step)
+    chunks = prefetch_lib.prefetch_chunks(ds, batch, k, seed=0)
+    best = float("inf")
+    t0 = None
+    rep_done = 0
+    for i, chunk in enumerate(chunks):
+        params, state, _ = runner(params, state, chunk)
+        done = i + 1 - n_chunks_warm
+        if done >= 0 and done % n_chunks_rep == 0:
+            jax.block_until_ready(params)
+            now = time.perf_counter()
+            if t0 is not None:
+                best = min(best, 1e6 * (now - t0) / (n_chunks_rep * k))
+                rep_done += 1
+            t0 = now
+            if rep_done >= reps:
+                break
+    assert rep_done, "dataset too small for the chunk grid"
+    return best
+
+
+def train_engine_bench(
+    out_path: str = "BENCH_train_engine.json",
+    fast: bool = False,
+    n_devices: int = 8,
+) -> list:
+    """Eager vs scan-fused training throughput across placements and
+    compute dtypes, emitted to ``BENCH_train_engine.json``.
+
+    The deepfm case of the shard benches (first-field vocab 1M, batch
+    8192) timed end-to-end through the two hot loops of
+    ``repro.train.engine``: ``eager`` (one jit dispatch + blocking
+    host->device copy per step, as ``train_ctr`` ran before the engine)
+    and ``scan`` x {1, 4, 16} (K updates fused in one ``lax.scan``
+    dispatch over background-prefetched chunks), each in fp32 and bf16
+    compute. Acceptance gate tracked by CI and the tier-1 smoke
+    (tests/test_engine.py): on the dense placement, scan x16 steps/sec
+    must beat eager — the scan carry keeps (params, opt_state) in place
+    across the K updates where the eager loop re-dispatches and
+    re-allocates per step. The mesh placements ride along in the full
+    (non ``--fast``) grid as structural signals, with the usual
+    virtual-device caveats (docs/benchmarks.md).
+    """
+    import dataclasses
+
+    from repro.core import build_train_step
+    from repro.models import ctr as ctr_lib
+
+    if jax.device_count() < n_devices:
+        raise SystemExit(
+            f"[train_engine_bench] needs {n_devices} devices, have "
+            f"{jax.device_count()} — run via benchmarks.run --engine-bench "
+            f"(which sets XLA_FLAGS before jax initializes)")
+
+    vocab, batch = 1_000_000, 8192
+    placements = (("dense", "sparse") if fast
+                  else ("dense", "sparse", "sharded", "sharded_sparse"))
+    scan_ks = (16,) if fast else (1, 4, 16)
+    dtypes = ("float32", "bfloat16")
+    path_of = {"dense": "substrate", "sparse": "sparse",
+               "sharded": "sharded", "sharded_sparse": "sharded_sparse"}
+    # enough rows for the largest grid point (warm + reps, chunk-rounded)
+    ds = _engine_bench_dataset(
+        vocab,
+        (_N_WARM_STEPS + _N_REPS * _N_TIMED_STEPS + 16) * batch)
+    cfg0, hp, _ = _sharded_bench_case(vocab, batch)
+
+    records, rows = [], []
+    for placement in placements:
+        mesh = (jax.make_mesh((1, n_devices), ("data", "model"))
+                if placement in ("sharded", "sharded_sparse") else None)
+        for dtype in dtypes:
+            cfg = dataclasses.replace(
+                cfg0, compute_dtype=dtype,
+                sparse=placement == "sparse",
+                placement=path_of[placement])
+            for engine, k in [("eager", 0)] + [("scan", k) for k in scan_ks]:
+                bundle = build_train_step(cfg, hp, path=path_of[placement],
+                                          mesh=mesh, warmup_steps=0)
+                params = bundle.prepare(
+                    ctr_lib.init(jax.random.key(0), cfg))
+                state = bundle.init(params)
+                if engine == "eager":
+                    us = _time_eager_steps(bundle, params, state, ds, batch)
+                else:
+                    us = _time_scan_steps(bundle, params, state, ds, batch, k)
+                rec = {"placement": placement, "engine": engine,
+                       "scan_steps": k, "compute_dtype": dtype,
+                       "vocab": vocab, "batch": batch, "step_us": us,
+                       "steps_per_sec": 1e6 / us,
+                       "rows_per_sec": batch * 1e6 / us}
+                records.append(rec)
+                name = (f"train_engine/{placement}/{dtype}/"
+                        f"{engine}{k if k else ''}")
+                rows.append(_csv(name, us,
+                                 f"rows_per_sec={rec['rows_per_sec']:.0f}"))
+                print(f"[train_engine_bench] {name}: {us:.0f} us/step")
+
+    def _us(placement, engine, k, dtype):
+        for r in records:
+            if (r["placement"], r["engine"], r["scan_steps"],
+                    r["compute_dtype"]) == (placement, engine, k, dtype):
+                return r["step_us"]
+        return None
+
+    summary = {}
+    dense_eager = _us("dense", "eager", 0, "float32")
+    dense_scan16 = _us("dense", "scan", 16, "float32")
+    if dense_eager and dense_scan16:
+        summary["dense_fp32_scan16_speedup_vs_eager"] = (
+            dense_eager / dense_scan16)
+    with open(out_path, "w") as f:
+        json.dump({"vocab": vocab, "batch": batch,
+                   "backend": jax.default_backend(),
+                   "n_devices": jax.device_count(),
+                   "summary": summary, "records": records}, f, indent=2)
+    print(f"[train_engine_bench] wrote {out_path}; summary {summary}")
     return rows
 
 
@@ -396,9 +612,12 @@ def main() -> None:
     ap.add_argument("--hybrid-bench", action="store_true",
                     help="run only the sharded-vs-sharded_sparse grid "
                          "(spawns 8 virtual host devices)")
+    ap.add_argument("--engine-bench", action="store_true",
+                    help="run only the eager-vs-scan training-engine grid "
+                         "(spawns 8 virtual host devices)")
     args = ap.parse_args()
 
-    if args.shard_bench or args.hybrid_bench:
+    if args.shard_bench or args.hybrid_bench or args.engine_bench:
         # must precede the first jax backend touch in this process
         from repro.launch.mesh import force_host_device_count
 
@@ -408,6 +627,8 @@ def main() -> None:
             rows += sharded_embedding_bench(fast=args.fast)
         if args.hybrid_bench:
             rows += hybrid_embedding_bench(fast=args.fast)
+        if args.engine_bench:
+            rows += train_engine_bench(fast=args.fast)
         print("\nname,us_per_call,derived")
         for row in rows:
             print(row)

@@ -127,6 +127,38 @@ def build_optimizer(
     return two_group(embed_tx, dense_tx)
 
 
+class StepFn:
+    """A jitted train step that also carries its un-jitted body.
+
+    ``scan_step`` is the pure ``(params, state, batch) -> (params, state,
+    aux)`` function the jit wraps, with every host-side effect (debug
+    callbacks, logging) stripped — the form ``lax.scan`` can fuse K copies
+    of (repro.train.engine). Calling the object runs the jitted step with
+    the usual donated ``(params, state)``.
+    """
+
+    __slots__ = ("_jitted", "scan_step")
+
+    def __init__(self, jitted, scan_step):
+        self._jitted = jitted
+        self.scan_step = scan_step
+
+    def __call__(self, params, state, batch):
+        return self._jitted(params, state, batch)
+
+
+def jit_step(step_impl, jit_target=None) -> StepFn:
+    """Standard wrapping for a pure step body: jit with donated
+    ``(params, state)``, keeping the body reachable for the scan engine.
+    ``jit_target`` substitutes a different function to jit (the eager
+    variant with host callbacks re-attached) while ``step_impl`` stays the
+    scan-safe body."""
+    return StepFn(
+        jax.jit(jit_target if jit_target is not None else step_impl,
+                donate_argnums=(0, 1)),
+        step_impl)
+
+
 def identity_prepare(params):
     """Default param placement: leave the tree exactly as initialized."""
     return params
@@ -152,6 +184,11 @@ class TrainStepBundle(NamedTuple):
              (the sharded path strips pad rows back to [vocab, dim]), so
              checkpoints are placement-independent — identity elsewhere.
              Export a *flushed* params tree.
+    scan_step: the pure, host-callback-free body ``step`` jits — what the
+             scan engine (repro.train.engine) fuses K copies of per
+             dispatch. None falls back to scanning ``step`` itself
+             (jit-under-jit inlines), minus chunk-level callback
+             relocation.
     """
 
     step: Callable
@@ -159,6 +196,7 @@ class TrainStepBundle(NamedTuple):
     flush: Callable
     prepare: Callable = identity_prepare
     export: Callable = identity_prepare
+    scan_step: Optional[Callable] = None
 
 
 TRAIN_PATHS = ("substrate", "fused", "sparse", "sharded", "sharded_sparse")

@@ -20,9 +20,37 @@ host; batches are served as device arrays.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Iterator, Sequence
 
 import numpy as np
+
+logger = logging.getLogger(__name__)
+
+# (n_rows, batch_size) pairs already reported by note_dropped_remainder —
+# the tail-drop note fires once per distinct shape, not once per epoch
+_noted_remainders: set = set()
+
+
+def note_dropped_remainder(n: int, batch_size: int) -> None:
+    """One-time note that a sub-batch row tail is being dropped.
+
+    ``train_ctr`` (and the engine's ``chunk_epoch``) iterate with
+    ``drop_remainder=True`` — static batch shapes keep every step on one
+    compiled executable — which silently discarded up to ``batch_size - 1``
+    rows per epoch. Surfacing it once per (dataset, batch) shape makes the
+    loss of data explicit; evaluation always runs with
+    ``drop_remainder=False`` and never drops rows. Documented in
+    docs/cli.md ("Batching and the row tail").
+    """
+    rem = n % batch_size
+    if rem and (n, batch_size) not in _noted_remainders:
+        _noted_remainders.add((n, batch_size))
+        logger.warning(
+            "[data] dropping a %d-row tail each epoch (%d rows / batch %d); "
+            "static step shapes require whole batches — shrink the batch or "
+            "pass drop_remainder=False where supported (eval already does)",
+            rem, n, batch_size)
 
 
 @dataclasses.dataclass
@@ -123,6 +151,8 @@ def iterate_batches(
     order = np.arange(n)
     if shuffle:
         np.random.default_rng(seed).shuffle(order)
+    if drop_remainder:
+        note_dropped_remainder(n, batch_size)
     stop = (n // batch_size) * batch_size if drop_remainder else n
     for start in range(0, stop, batch_size):
         idx = order[start : start + batch_size]

@@ -10,11 +10,16 @@ vocabs). This module restricts the per-shard update to the batch ids the
 shard owns, composing the two prior placements:
 
 * Each model-shard dedups the *global* batch's ids that map to its rows
-  into a static-capacity unique set (``owned_unique_local`` — capacity
-  O(batch), padded). The global ids are one cheap int32 ``all_gather`` over
-  "data" inside the ``shard_map``; the dedup itself then runs per device,
-  so every data slice of a shard agrees on the slots without a dedicated
-  collective and the sort stays out of the SPMD partitioner.
+  into a static-capacity unique set (capacity O(batch), padded), staged so
+  the "data" collective carries unique ids rather than the raw batch: each
+  data slice first dedups its own column with counts
+  (``slice_unique_counts``), the per-slice (uids, counts) pairs are
+  all-gathered over "data" inside the ``shard_map``, and each model shard
+  dedups the owned subset of the union with the counts summed per slot
+  (``owned_unique_weighted`` — identical slots/counts/overflow to the
+  single-stage ``owned_unique_local`` oracle). Every data slice of a shard
+  agrees on the slots without a dedicated collective and the sort stays
+  out of the SPMD partitioner.
 * Touched rows are gathered, their pending coupled-L2 decay replayed via a
   per-row ``last_step`` (the sparse path's lazy-decay contract), then the
   fused CowClip/L2/Adam row update runs and scatters back — row-local and
@@ -125,6 +130,11 @@ def owned_unique_local(ids_col: jnp.ndarray, plan: RowShardPlan,
     runs the identical computation, so the slot assignment is replicated
     without a dedicated collective, and the sort never crosses devices.
 
+    The train step now uses the staged ``slice_unique_counts`` ->
+    all-gather -> ``owned_unique_weighted`` pipeline instead (same slots,
+    smaller "data" collective); this single-stage form remains the oracle
+    the staged one is tested against.
+
     Returns ``(local_rows [capacity], counts [capacity], overflow bool)``
     with the ``ShardUniqueSets`` slot conventions.
     """
@@ -134,6 +144,97 @@ def owned_unique_local(ids_col: jnp.ndarray, plan: RowShardPlan,
     uids, counts, overflow = unique_owned_ids(
         ids_col, plan.shard_of(ids_col) == r, plan.vocab, capacity)
     return _local_rows(uids, plan), counts, overflow
+
+
+def slice_unique_counts(ids_col: jnp.ndarray, vocab: int, capacity: int):
+    """Stage 1 of the staged dedup: one data slice's column deduplicated
+    with occurrence counts, before any collective.
+
+    ``capacity`` must be the exact ``min(len(ids_col), vocab)`` — a slice
+    set that drops ids would silently lose gradient slots downstream (the
+    per-*shard* capacity is the one that may be capped; its overflow has a
+    dense fallback). Pads hold the ``vocab`` sentinel with count 0.
+    """
+    uids, counts = jnp.unique(ids_col, size=capacity, fill_value=vocab,
+                              return_counts=True)
+    real = uids < vocab
+    return (uids.astype(jnp.int32),
+            jnp.where(real, counts, 0).astype(jnp.float32))
+
+
+def owned_unique_weighted(gids: jnp.ndarray, gcnts: jnp.ndarray,
+                          plan: RowShardPlan, capacity: int,
+                          axis_name: str = "model"):
+    """Stage 2 of the staged dedup, inside ``shard_map``: the owned subset
+    of the all-gathered per-slice unique sets, with the gathered counts
+    summed per slot.
+
+    ``gids``/``gcnts`` are the "data"-axis concatenation of every slice's
+    ``slice_unique_counts`` output (an id two slices share appears twice;
+    its counts add). Slots, counts, and the overflow flag are exactly those
+    ``owned_unique_local`` computes from the raw gathered batch — the
+    staged form just moves the O(batch) sort before the collective so the
+    all-gather carries unique ids, and hands phase 2 a slot set compatible
+    with ``rowgrad_slots``'s O(capacity) gradient assembly.
+
+    Returns ``(local_rows [capacity], counts [capacity], overflow bool)``.
+    """
+    r = jax.lax.axis_index(axis_name)
+    owned = (plan.shard_of(gids) == r) & (gids < plan.vocab)
+    masked = jnp.where(owned, gids, plan.vocab)
+    uids, inv = jnp.unique(masked, size=capacity + 1, fill_value=plan.vocab,
+                           return_inverse=True)
+    counts = jax.ops.segment_sum(
+        jnp.where(owned, gcnts, 0.0), inv.reshape(-1),
+        num_segments=capacity + 1)
+    real = uids < plan.vocab
+    counts = jnp.where(real, counts, 0.0)
+    overflow = uids[capacity] < plan.vocab
+    return (_local_rows(uids[:capacity], plan),
+            counts[:capacity].astype(jnp.float32), overflow)
+
+
+def full_counts_from_gathered(gids: jnp.ndarray, gcnts: jnp.ndarray,
+                              plan: RowShardPlan,
+                              axis_name: str = "model") -> jnp.ndarray:
+    """CowClip's per-local-row global counts ``[rows_per_shard]`` for the
+    dense fallback branch, from the all-gathered slice unique sets — the
+    staged replacement for ``psum(counts_partial(...), "data")`` (the
+    gathered sets already cover the global batch, so no extra collective).
+    """
+    r = jax.lax.axis_index(axis_name)
+    owned = (plan.shard_of(gids) == r) & (gids < plan.vocab)
+    local = jnp.where(owned, plan.local_row(gids), plan.rows_per_shard)
+    return jax.ops.segment_sum(jnp.where(owned, gcnts, 0.0), local,
+                               num_segments=plan.rows_per_shard)
+
+
+def rowgrad_slots(g_col: jnp.ndarray, ids_col: jnp.ndarray,
+                  plan: RowShardPlan, uloc: jnp.ndarray,
+                  axis_name: str = "model") -> jnp.ndarray:
+    """This data slice's contribution to the ``[capacity, dim]`` row
+    gradient on the slot set ``uloc``; ``psum`` over "data" completes it.
+
+    The slot-level transpose of the masked lookup: each owned batch id is
+    located in the (ascending, pad=``rows_per_shard``) slot set by binary
+    search and its cotangent segment-summed onto the slot — O(batch +
+    capacity) work and memory, against ``rowgrad_partial``'s
+    O(rows_per_shard) full-row materialization. Only valid when the slot
+    set cannot have overflowed (every owned id then has a slot; the train
+    step guarantees this by routing overflow-capable fields through the
+    full-row path).
+    """
+    from .sharded import owned_mask_and_rows
+
+    capacity = uloc.shape[0]
+    mine, local = owned_mask_and_rows(ids_col, plan, axis_name)
+    slot = jnp.searchsorted(uloc, local).astype(jnp.int32)
+    clipped = jnp.minimum(slot, capacity - 1)
+    hit = mine & (jnp.take(uloc, clipped) == local)
+    slot = jnp.where(hit, clipped, capacity)
+    contrib = jnp.where(hit[:, None], g_col, jnp.zeros_like(g_col))
+    return jax.ops.segment_sum(contrib, slot,
+                               num_segments=capacity + 1)[:capacity]
 
 
 # ---------------------------------------------------------------------------
@@ -206,27 +307,30 @@ def catchup_phase(w, m, v, ls, uloc, counts, overflow, t, *, use_kernel,
 
 
 def update_phase(w_fwd, m_base, v_base, ls, w_rows, m_rows, v_rows,
-                 uloc, counts, overflow, g_full, cnt_full, t, *,
+                 uloc, counts, overflow, g_slots, g_full, cnt_full, t, *,
                  use_kernel, interpret, clip=True, r=1.0, zeta=1e-5,
                  lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8):
     """Post-backward phase on one (field, group) shard.
 
-    Sparse branch: gather the psum'd row gradient at the touched slots, run
-    CowClip -> coupled L2 -> Adam on the caught-up rows, scatter back, and
-    stamp ``last_step = t`` on the touched rows only (everything else keeps
-    accruing lazy decay). Overflow branch: the PR-2 dense per-shard update
-    over the fully-caught-up shard, ``last_step = t`` everywhere.
+    Sparse branch: take the psum'd row gradient at the touched slots —
+    ``g_slots`` ([capacity, dim], from ``rowgrad_slots``) when overflow is
+    statically impossible, else gathered from the full-row ``g_full`` —
+    run CowClip -> coupled L2 -> Adam on the caught-up rows, scatter back,
+    and stamp ``last_step = t`` on the touched rows only (everything else
+    keeps accruing lazy decay). Overflow branch: the PR-2 dense per-shard
+    update over the fully-caught-up shard, ``last_step = t`` everywhere.
 
     Returns ``(new_w, new_m, new_v, new_ls)``. ``overflow`` may be the
-    static ``False`` (see ``catchup_phase``); ``cnt_full`` is only read by
-    the fallback branch and may then be None.
+    static ``False`` (see ``catchup_phase``); ``g_full``/``cnt_full`` are
+    only read by the fallback machinery and may be None when overflow is
+    impossible (``g_slots`` may in turn be None when it is not).
     """
     rows = w_fwd.shape[0]
     safe = jnp.minimum(uloc, rows - 1)
     adam_kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
 
     def sparse_branch(_):
-        g_rows = g_full[safe]
+        g_rows = g_slots if g_slots is not None else g_full[safe]
         if use_kernel:
             su = _safe_local(uloc, counts, rows)
             w2, m2, v2 = cc_sparse.sparse_update_scatter(

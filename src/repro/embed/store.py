@@ -122,7 +122,8 @@ class EmbeddingStore:
                 hp, clip_kind=clip_kind, r=r, zeta=zeta, clip_t=clip_t,
                 warmup_steps=warmup_steps, b1=b1, b2=b2, eps=eps)
             step = loop_lib.make_train_step(cfg, tx)
-            return TrainStepBundle(step, tx.init, builders.identity_flush)
+            return TrainStepBundle(step, tx.init, builders.identity_flush,
+                                   scan_step=step.scan_step)
 
         dense_tx = builders.dense_tower_tx(
             hp, warmup_steps=warmup_steps, b1=b1, b2=b2, eps=eps)
@@ -131,7 +132,8 @@ class EmbeddingStore:
             step, init = loop_lib.make_fused_train_step(
                 cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx,
                 use_kernel=use_kernel)
-            return TrainStepBundle(step, init, builders.identity_flush)
+            return TrainStepBundle(step, init, builders.identity_flush,
+                                   scan_step=step.scan_step)
 
         if clip_kind not in ("adaptive_column", "none"):
             raise ValueError(
@@ -144,7 +146,8 @@ class EmbeddingStore:
                 cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx,
                 use_kernel=use_kernel, clip=clip_kind == "adaptive_column",
                 b1=b1, b2=b2, eps=eps)
-            return TrainStepBundle(step, init, flush)
+            return TrainStepBundle(step, init, flush,
+                                   scan_step=step.scan_step)
 
         # sharded / sharded_sparse
         from . import sharded as shard_lib
@@ -163,7 +166,8 @@ class EmbeddingStore:
                     cfg, hp, mesh, scheme=self.partition, r=r, zeta=zeta,
                     dense_tx=dense_tx, clip=clip_kind == "adaptive_column",
                     b1=b1, b2=b2, eps=eps))
-        return TrainStepBundle(step, init, flush, prepare, export)
+        return TrainStepBundle(step, init, flush, prepare, export,
+                               scan_step=step.scan_step)
 
 
 def resolve_path(cfg, path: Optional[str] = None) -> str:

@@ -82,7 +82,7 @@ def run_ctr(args) -> None:
         n_dense=ds.dense.shape[1], emb_dim=args.emb_dim,
         mlp_dims=(args.mlp_dim,) * 3, emb_sigma=1e-2,
         sparse=placement == "sparse", unique_capacity=args.unique_capacity,
-        placement=placement,
+        placement=placement, compute_dtype=args.compute_dtype,
     )
     mesh = None
     if placement in MESH_PLACEMENTS:
@@ -92,9 +92,12 @@ def run_ctr(args) -> None:
             jax.eval_shape(lambda: ctr_lib.init(jax.random.key(0), cfg)))
     )
     store = store_for(cfg, mesh=mesh, partition=args.partition)
+    engine_desc = (f"scan x{args.scan_steps}" if args.engine == "scan"
+                   else "eager")
     print(f"[train] {args.model}: {n_params/1e6:.1f}M params "
           f"({len(tr)} train rows, batch {args.batch}, rule {args.rule}, "
-          f"embedding store {store.describe()})")
+          f"embedding store {store.describe()}, engine {engine_desc}, "
+          f"compute {args.compute_dtype})")
 
     hp = scale_hyperparams(
         args.rule, base_lr=args.base_lr, base_l2=args.base_l2,
@@ -108,7 +111,8 @@ def run_ctr(args) -> None:
                                warmup_steps=warmup)
     res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
                     epochs=args.epochs, seed=args.seed, log_fn=print,
-                    step_bundle=bundle, max_steps=args.steps)
+                    step_bundle=bundle, max_steps=args.steps,
+                    engine=args.engine, scan_steps=args.scan_steps)
     print(f"[train] done: {res.steps} steps in {res.seconds:.1f}s "
           f"-> AUC {100*res.final_eval['auc']:.2f} "
           f"logloss {res.final_eval['logloss']:.4f}")
@@ -229,6 +233,19 @@ def main():
     ap.add_argument("--partition", default="div", choices=("div", "mod"),
                     help="sharded row mapping: div = contiguous blocks, "
                          "mod = round-robin (balances Zipf-hot low ids)")
+    ap.add_argument("--engine", default="scan", choices=("eager", "scan"),
+                    help="training hot loop (repro.train.engine): 'scan' "
+                         "(default) fuses --scan-steps updates into one "
+                         "lax.scan dispatch over prefetched batch chunks; "
+                         "'eager' dispatches one jit per step (debugging)")
+    ap.add_argument("--scan-steps", type=int, default=8,
+                    help="updates fused per dispatch under --engine scan; "
+                         "results are bit-identical for any value")
+    ap.add_argument("--compute-dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="forward/backward activation dtype; masters, "
+                         "CowClip stats and Adam moments stay float32 "
+                         "(docs/cli.md)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="simulate N CPU devices (sets XLA_FLAGS; must act "
                          "before jax initializes, so it is handled first "

@@ -58,12 +58,16 @@ def init_field_tables(
     }
 
 
-def lookup(tables: dict, ids: jnp.ndarray) -> jnp.ndarray:
+def lookup(tables: dict, ids: jnp.ndarray, dtype=None) -> jnp.ndarray:
     """Gather per-field embeddings.
 
     Args:
       tables: {"field_i": [vocab_i, dim]}
       ids:    [batch, n_fields] int32
+      dtype:  optional activation dtype; the gathered rows are cast
+              per-column before stacking (mixed precision: the f32 master
+              tables stay put, only the [batch, dim] activations narrow,
+              and the cast's transpose widens cotangents back to f32).
     Returns:
       [batch, n_fields, dim]
     """
@@ -71,6 +75,8 @@ def lookup(tables: dict, ids: jnp.ndarray) -> jnp.ndarray:
         jnp.take(tables[f"field_{i}"], ids[:, i], axis=0)
         for i in range(ids.shape[1])
     ]
+    if dtype is not None:
+        cols = [c.astype(dtype) for c in cols]
     return jnp.stack(cols, axis=1)
 
 
@@ -183,10 +189,17 @@ def scatter_rows(tables: dict, uniq: dict, rows: dict) -> dict:
     }
 
 
-def lookup_rows(rows: dict, uniq: dict) -> jnp.ndarray:
-    """Forward lookup from gathered unique rows -> [batch, n_fields, dim]."""
+def lookup_rows(rows: dict, uniq: dict, dtype=None) -> jnp.ndarray:
+    """Forward lookup from gathered unique rows -> [batch, n_fields, dim].
+
+    ``dtype`` casts each column like ``lookup`` does — note the cast sits
+    *after* the unique-row gather, so the sparse path's row cotangents
+    (what CowClip clips and Adam consumes) stay f32.
+    """
     cols = [rows[f"field_{i}"][uniq[f"field_{i}"].inv]
             for i in range(len(uniq))]
+    if dtype is not None:
+        cols = [c.astype(dtype) for c in cols]
     return jnp.stack(cols, axis=1)
 
 

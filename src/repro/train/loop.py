@@ -7,7 +7,6 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -15,8 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import GradientTransformation, apply_updates
+from ..core.builders import jit_step
 
 logger = logging.getLogger(__name__)
+from ..data import prefetch as prefetch_lib
 from ..data.synthetic import CTRDataset, iterate_batches
 from ..models import ctr
 from ..models import embedding as embedding_lib
@@ -32,6 +33,9 @@ def make_train_step(cfg: ctr.CTRConfig, tx: GradientTransformation):
     unique-id gather layer (grads w.r.t. embeddings materialize on gathered
     rows and scatter back through the gather's backward) — same update
     semantics as the dense forward, routed through the sparse layout.
+
+    Like every step factory here, the returned callable carries its pure
+    body as ``.scan_step`` for the scan engine (repro.train.engine).
     """
 
     def loss_fn(params, ids, dense, labels):
@@ -43,8 +47,7 @@ def make_train_step(cfg: ctr.CTRConfig, tx: GradientTransformation):
             logits = ctr.apply(params, cfg, ids, dense)
         return metrics.logloss(logits, labels), logits
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, opt_state, batch):
+    def step_impl(params, opt_state, batch):
         (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch["ids"], batch["dense"], batch["labels"]
         )
@@ -53,7 +56,7 @@ def make_train_step(cfg: ctr.CTRConfig, tx: GradientTransformation):
         params = apply_updates(params, updates)
         return params, opt_state, {"loss": loss}
 
-    return step
+    return jit_step(step_impl)
 
 
 def _is_uniq(x) -> bool:
@@ -116,8 +119,7 @@ def make_fused_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         logits = ctr.apply(params, cfg, ids, dense)
         return metrics.logloss(logits, labels)
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, state, batch):
+    def step_impl(params, state, batch):
         loss, grads = jax.value_and_grad(loss_fn)(
             params, batch["ids"], batch["dense"], batch["labels"])
         counts = ctr.batch_counts(cfg, batch["ids"], params)
@@ -141,7 +143,7 @@ def make_fused_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         return {"embed": new_embed, "dense": new_dense}, new_state, {
             "loss": loss}
 
-    return step, init
+    return jit_step(step_impl), init
 
 
 def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
@@ -185,8 +187,7 @@ def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         logits = ctr.apply_rows(rows, dense_params, cfg, uniq, dense_feats)
         return metrics.logloss(logits, labels)
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, state, batch):
+    def step_impl(params, state, batch):
         t = state["step"] + 1
         uniq = ctr.unique_batch(cfg, batch["ids"])
         utree = _uniq_tree(params["embed"], uniq)
@@ -234,7 +235,7 @@ def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         return {"embed": new_embed, "dense": new_dense}, new_state, {
             "loss": loss}
 
-    return step, init, _make_lazy_flush(adam_kw)
+    return jit_step(step_impl), init, _make_lazy_flush(adam_kw)
 
 
 def _make_lazy_flush(adam_kw: dict):
@@ -354,8 +355,7 @@ def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         out_specs=(EMB, EMB, EMB, REP, REP),
     )
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, state, batch):
+    def step_impl(params, state, batch):
         ids = batch["ids"]
         if ids.shape[0] % n_data:
             raise ValueError(
@@ -385,7 +385,7 @@ def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         eagerly on their shard, exactly like the dense path)."""
         return params, state
 
-    return step, init, flush, prepare, export
+    return jit_step(step_impl), init, flush, prepare, export
 
 
 def _warn_overflow(n, t):
@@ -472,23 +472,50 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
                    ids, feats, labels):
         # embed/m/v/ls are this model-slice's rows; ids/feats/labels this
         # data-slice's batch shard, replicated along "model".
-        b_global = ids.shape[0] * n_data
+        b_loc = ids.shape[0]
+        b_global = b_loc * n_data
 
-        # per-shard unique-id dedup of the global batch: all-gather the
-        # int32 ids over "data" (a few KB) and dedup the owned subset per
-        # device — every data slice of a shard derives identical slots.
+        # Per-shard unique-id dedup of the global batch. With a real data
+        # axis the dedup is staged so the "data" collective carries unique
+        # ids instead of the raw batch: (1) each data slice dedups its own
+        # column per field (counts included — one sort of b_loc, identical
+        # on every model replica of that slice), (2) the per-slice (uids,
+        # counts) pairs are all-gathered over "data" (padded to the
+        # static, still-exact cap min(b_loc, vocab) — small-vocab fields
+        # gather O(vocab), not O(batch)), (3) each model shard dedups the
+        # owned subset of the union, summing the gathered counts per slot
+        # (same slots, counts and overflow flag as a dedup of the full
+        # gathered batch — asserted in tests). With n_data == 1 the local
+        # column already *is* the global batch: the all-gather would be a
+        # no-op and the stage-1 sort pure overhead (measured ~25% of the
+        # hybrid step on the CPU bench), so the single-stage dedup runs
+        # directly — a trace-time switch, both paths bit-identical.
         # A field whose capacity equals the exact default can never
-        # overflow; its fallback machinery (the per-field counts psum and
-        # both cond branches) is dropped at trace time.
-        gids = jax.lax.all_gather(ids, "data", axis=0, tiled=True)
+        # overflow; its fallback machinery (the full-row counts/grad
+        # assembly and both cond branches) is dropped at trace time.
+        staged = n_data > 1
         dedup = {}
+        gathered = {}
         for i in range(n_fields):
             f = f"field_{i}"
-            cap = hybrid_lib.shard_capacity(
-                plans[f], b_global, cfg.unique_capacity)
-            can_overflow = cap < min(b_global, plans[f].rows_per_shard)
-            uloc, cnts, ovf = hybrid_lib.owned_unique_local(
-                gids[:, i], plans[f], cap)
+            plan = plans[f]
+            cap = hybrid_lib.shard_capacity(plan, b_global,
+                                            cfg.unique_capacity)
+            can_overflow = cap < min(b_global, plan.rows_per_shard)
+            if staged:
+                u_slice, c_slice = hybrid_lib.slice_unique_counts(
+                    ids[:, i], plan.vocab, min(b_loc, plan.vocab))
+                gids = jax.lax.all_gather(u_slice, "data", axis=0,
+                                          tiled=True)
+                gcnts = jax.lax.all_gather(c_slice, "data", axis=0,
+                                           tiled=True)
+                uloc, cnts, ovf = hybrid_lib.owned_unique_weighted(
+                    gids, gcnts, plan, cap)
+                gathered[f] = (gids, gcnts)
+            else:
+                uloc, cnts, ovf = hybrid_lib.owned_unique_local(
+                    ids[:, i], plan, cap)
+                gathered[f] = None
             dedup[f] = (uloc, cnts, ovf if can_overflow else False)
         n_overflow = jax.lax.psum(
             sum(jnp.sum(jnp.asarray(d[2]).astype(jnp.int32))
@@ -514,8 +541,14 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         loss, g_emb, g_lin, g_dense = shard_lib.batch_forward_backward(
             cfg, plans, fwd, dense_params, ids, feats, labels, n_data)
 
-        # phase 2: row update on the touched slots (dense fallback on
-        # overflow), with row grads/counts psum'd over "data" as usual
+        # phase 2: row update on the touched slots. When overflow is
+        # statically impossible (the default) the row gradient is
+        # assembled directly on the [capacity] slot set — a segment_sum
+        # and "data" psum of O(batch) slots instead of the
+        # O(rows_per_shard) full-row materialization, which dominated the
+        # hybrid's step time at production vocabs. Overflow-capable fields
+        # keep the full-row grad/count assembly their dense fallback
+        # branch needs.
         new_w = {g: {} for g in embed_sh}
         new_m = {g: {} for g in embed_sh}
         new_v = {g: {} for g in embed_sh}
@@ -524,20 +557,32 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
             f = f"field_{i}"
             plan = plans[f]
             uloc, cnts, ovf = dedup[f]
-            cnt_full = (jax.lax.psum(
-                shard_lib.counts_partial(ids[:, i], plan), "data")
-                if ovf is not False else None)
+            cnt_full = None
+            if ovf is not False:
+                cnt_full = (
+                    hybrid_lib.full_counts_from_gathered(*gathered[f], plan)
+                    if staged else
+                    jax.lax.psum(shard_lib.counts_partial(ids[:, i], plan),
+                                 "data"))
             for group, g_batch in (("fm", g_emb), ("lin", g_lin)):
                 if group not in embed_sh:
                     continue
-                g_full = jax.lax.psum(
-                    shard_lib.rowgrad_partial(g_batch[:, i, :], ids[:, i],
-                                              plan), "data")
+                if ovf is False:
+                    g_slots = jax.lax.psum(
+                        hybrid_lib.rowgrad_slots(g_batch[:, i, :],
+                                                 ids[:, i], plan, uloc),
+                        "data")
+                    g_full = None
+                else:
+                    g_slots = None
+                    g_full = jax.lax.psum(
+                        shard_lib.rowgrad_partial(g_batch[:, i, :],
+                                                  ids[:, i], plan), "data")
                 (new_w[group][f], new_m[group][f], new_v[group][f],
                  new_ls[group][f]) = hybrid_lib.update_phase(
                     fwd[group][f], base_m[group][f], base_v[group][f],
                     ls_sh[group][f], *rows_c[group][f], uloc, cnts, ovf,
-                    g_full, cnt_full, t, use_kernel=use_kernel,
+                    g_slots, g_full, cnt_full, t, use_kernel=use_kernel,
                     interpret=interpret, **upd_kw)
         return new_w, new_m, new_v, new_ls, g_dense, loss, n_overflow
 
@@ -553,8 +598,7 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         check_rep=False,
     )
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, state, batch):
+    def step_impl(params, state, batch):
         ids = batch["ids"]
         if ids.shape[0] % n_data:
             raise ValueError(
@@ -567,10 +611,6 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         new_w, new_m, new_v, new_ls, g_dense, loss, n_overflow = smapped(
             w_p, m_p, v_p, ls_p, params["dense"], t,
             ids, batch["dense"], batch["labels"])
-        jax.lax.cond(
-            n_overflow > 0,
-            lambda n, tt: jax.debug.callback(_warn_overflow, n, tt),
-            lambda n, tt: None, n_overflow, t)
         new_embed = shard_lib.to_logical(new_w, plans)
         d_updates, d_state = dense_tx.update(
             g_dense, state["dense"], params["dense"])
@@ -583,26 +623,67 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         return {"embed": new_embed, "dense": new_dense}, new_state, {
             "loss": loss, "overflow_shards": n_overflow}
 
-    return step, init, _make_lazy_flush(adam_kw), prepare, export
+    def step_eager(params, state, batch):
+        # the host-side overflow warning lives only on the eager step: a
+        # scanned body cannot carry a per-step callback, so the engine's
+        # chunk runner re-attaches it per chunk over the summed aux
+        params, state, aux = step_impl(params, state, batch)
+        jax.lax.cond(
+            aux["overflow_shards"] > 0,
+            lambda n, tt: jax.debug.callback(_warn_overflow, n, tt),
+            lambda n, tt: None, aux["overflow_shards"], state["step"])
+        return params, state, aux
+
+    return (jit_step(step_impl, jit_target=step_eager), init,
+            _make_lazy_flush(adam_kw), prepare, export)
 
 
 def make_eval_fn(cfg: ctr.CTRConfig):
+    """Batched, prefetch-overlapped evaluation.
+
+    Scoring runs in fixed ``[batch_size]`` slices — one compiled executable
+    regardless of test-set size (the tail slice is zero-padded and its pad
+    scores discarded host-side), bounding device memory at one batch of
+    activations instead of the whole test set. Host slicing runs on the
+    background prefetch worker so the batch *i+1* copy overlaps the batch
+    *i* forward. The returned metrics include ``eval_rows_per_sec``
+    (scored rows / wall-clock over the scoring loop).
+    """
+
     @jax.jit
     def logits_fn(params, ids, dense):
         return ctr.apply(params, cfg, ids, dense)
 
     def evaluate(params, ds: CTRDataset, batch_size: int = 8192) -> dict:
-        all_scores, all_labels = [], []
-        for b in iterate_batches(ds, batch_size, shuffle=False, drop_remainder=False):
-            s = logits_fn(params, jnp.asarray(b["ids"]), jnp.asarray(b["dense"]))
-            all_scores.append(np.asarray(s))
-            all_labels.append(b["labels"])
-        scores = np.concatenate(all_scores)
-        labels = np.concatenate(all_labels)
-        ll = float(
-            np.mean(np.logaddexp(0.0, scores) - labels * scores)
-        )
-        return {"auc": metrics.auc_numpy(scores, labels), "logloss": ll}
+        n = len(ds)
+        bs = min(batch_size, n)
+
+        def host_slices():
+            for start in range(0, n, bs):
+                end = min(start + bs, n)
+                ids, dense = ds.ids[start:end], ds.dense[start:end]
+                if end - start < bs:
+                    pad = bs - (end - start)
+                    ids = np.concatenate(
+                        [ids, np.zeros((pad,) + ids.shape[1:], ids.dtype)])
+                    dense = np.concatenate(
+                        [dense, np.zeros((pad,) + dense.shape[1:],
+                                         dense.dtype)])
+                yield {"ids": ids, "dense": dense}
+
+        scores = np.empty(n, np.float32)
+        start = 0
+        t0 = time.perf_counter()
+        for b in prefetch_lib.prefetch(host_slices()):
+            s = logits_fn(params, b["ids"], b["dense"])
+            end = min(start + bs, n)
+            scores[start:end] = np.asarray(s)[: end - start]
+            start = end
+        seconds = time.perf_counter() - t0
+        labels = ds.labels
+        ll = float(np.mean(np.logaddexp(0.0, scores) - labels * scores))
+        return {"auc": metrics.auc_numpy(scores, labels), "logloss": ll,
+                "eval_rows_per_sec": n / max(seconds, 1e-9)}
 
     return evaluate
 
@@ -632,6 +713,9 @@ def train_ctr(
     log_fn: Optional[Callable[[str], None]] = None,
     step_bundle=None,
     max_steps: Optional[int] = None,
+    engine: str = "eager",
+    scan_steps: int = 8,
+    prefetch_buffers: int = 2,
 ) -> TrainResult:
     """Epoch driver. By default steps through the composable-optimizer path
     (``tx``); pass a ``core.builders.TrainStepBundle`` (any
@@ -641,7 +725,19 @@ def train_ctr(
     rows over the mesh), and ``flush`` runs before every eval so
     lazily-decayed params are exact. ``max_steps`` hard-caps the total step
     count across epochs (smoke runs; the CLI's ``--steps``).
+
+    ``engine`` selects the hot loop (repro.train.engine): ``"eager"`` — one
+    jit dispatch and one blocking host->device copy per step, the
+    debugging-friendly reference; ``"scan"`` — ``scan_steps`` updates fused
+    into one ``lax.scan`` dispatch over prefetched, background-stacked
+    batch chunks (``prefetch_buffers`` deep). Both consume the identical
+    shuffle order, so results match the eager loop exactly.
     """
+    from . import engine as engine_lib
+
+    if engine not in engine_lib.ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         f"{engine_lib.ENGINES}")
     params = ctr.init(jax.random.key(seed), cfg)
     if step_bundle is not None:
         params = step_bundle.prepare(params)
@@ -652,6 +748,10 @@ def train_ctr(
         step_fn = make_train_step(cfg, tx)
         flush = None
     eval_fn = make_eval_fn(cfg)
+    runner = None
+    if engine == "scan":
+        runner = engine_lib.make_chunk_runner(
+            engine_lib.resolve_scan_step(step_bundle, step_fn))
 
     history = []
     n_steps = 0
@@ -659,12 +759,21 @@ def train_ctr(
     for epoch in range(epochs):
         if max_steps is not None and n_steps >= max_steps:
             break
-        for b in iterate_batches(train_ds, batch_size, seed=seed + epoch):
-            batch = {k: jnp.asarray(v) for k, v in b.items()}
-            params, opt_state, aux = step_fn(params, opt_state, batch)
-            n_steps += 1
-            if max_steps is not None and n_steps >= max_steps:
-                break
+        if engine == "scan":
+            params, opt_state, ran, _ = engine_lib.run_epoch(
+                runner, params, opt_state, train_ds, batch_size, scan_steps,
+                seed=seed + epoch,
+                max_steps=(None if max_steps is None
+                           else max_steps - n_steps),
+                buffer_size=prefetch_buffers)
+            n_steps += ran
+        else:
+            for b in iterate_batches(train_ds, batch_size, seed=seed + epoch):
+                batch = {k: jnp.asarray(v) for k, v in b.items()}
+                params, opt_state, aux = step_fn(params, opt_state, batch)
+                n_steps += 1
+                if max_steps is not None and n_steps >= max_steps:
+                    break
         if eval_every_epoch and test_ds is not None:
             if flush is not None:
                 params, opt_state = flush(params, opt_state)

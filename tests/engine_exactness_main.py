@@ -1,0 +1,129 @@
+"""Scan-engine exactness driver: K scanned steps vs K eager steps, per
+placement, under 8 virtual devices.
+
+Run as a script in its own subprocess (tests/test_engine.py does) because
+the virtual-device flag must be set before jax initializes; the main suite
+keeps the plain 1-device backend. Each case builds one placement's bundle,
+runs K eager steps and one K-step scanned chunk from identical inits over
+identical batches, and reports bitwise equality of params, opt_state, and
+the per-step aux, plus whether the chunk runner actually donated its carry
+— one JSON line per case.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+
+import json
+import sys
+
+import numpy as np
+
+VOCABS = (57, 13, 5)
+K = 4
+BATCH = 32
+
+
+def _batches(n_steps, batch, seed):
+    """Duplicate-heavy batches (Zipf-like repeats exercise the dedup and
+    lazy-decay machinery)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_steps):
+        ids = np.stack([
+            rng.choice([1, 2, 3, 50, 51], size=batch),
+            rng.integers(0, 13, size=batch),
+            rng.choice([0, 4], size=batch),
+        ], axis=1).astype(np.int32)
+        yield {
+            "ids": ids,
+            "dense": rng.normal(size=(batch, 3)).astype(np.float32),
+            "labels": (rng.random(batch) < 0.3).astype(np.float32),
+        }
+
+
+def _bitwise_equal(a_tree, b_tree):
+    import jax
+
+    return all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(a_tree), jax.tree.leaves(b_tree)))
+
+
+def run_case(name, placement, mesh_shape=None, scheme="div",
+             compute_dtype="float32"):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_train_step, scale_hyperparams
+    from repro.models import ctr
+    from repro.train import engine as engine_lib
+
+    cfg = ctr.CTRConfig(name="deepfm", vocab_sizes=VOCABS, n_dense=3,
+                        emb_dim=8, mlp_dims=(16, 16, 16), emb_sigma=1e-2,
+                        compute_dtype=compute_dtype)
+    hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-3,
+                           base_batch=64, batch_size=64, base_dense_lr=2e-3)
+    mesh = (jax.make_mesh(mesh_shape, ("data", "model"))
+            if mesh_shape else None)
+    bundle = build_train_step(cfg, hp, path=placement, mesh=mesh,
+                              partition=scheme, warmup_steps=0)
+    params0 = ctr.init(jax.random.key(0), cfg)
+    batches = list(_batches(K, BATCH, seed=1))
+    chunk = {k: jnp.asarray(np.stack([b[k] for b in batches]))
+             for k in batches[0]}
+
+    # eager reference: K per-step dispatches
+    pe = bundle.prepare(jax.tree.map(jnp.copy, params0))
+    se = bundle.init(pe)
+    aux_eager = []
+    for b in batches:
+        pe, se, a = bundle.step(pe, se,
+                                {k: jnp.asarray(v) for k, v in b.items()})
+        aux_eager.append(a)
+
+    # scanned chunk: one dispatch for the same K steps
+    ps = bundle.prepare(jax.tree.map(jnp.copy, params0))
+    ss = bundle.init(ps)
+    runner = engine_lib.make_chunk_runner(bundle.scan_step)
+    carry_leaves = jax.tree.leaves((ps, ss))
+    ps, ss, aux_stack = runner(ps, ss, chunk)
+
+    aux_ok = all(
+        np.array_equal(np.asarray(aux_stack[key][i]),
+                       np.asarray(aux_eager[i][key]))
+        for i in range(K) for key in aux_eager[0])
+    return {
+        "name": name,
+        "placement": placement,
+        "mesh": list(mesh_shape) if mesh_shape else None,
+        "params_bitwise_equal": _bitwise_equal(pe, ps),
+        "state_bitwise_equal": _bitwise_equal(se, ss),
+        "aux_bitwise_equal": bool(aux_ok),
+        "carry_donated": all(x.is_deleted() for x in carry_leaves),
+        "losses": [float(x) for x in np.asarray(aux_stack["loss"])],
+    }
+
+
+CASES = {
+    "dense_substrate": dict(placement="substrate"),
+    "dense_fused": dict(placement="fused"),
+    "sparse": dict(placement="sparse"),
+    "sharded_2x4": dict(placement="sharded", mesh_shape=(2, 4)),
+    "sharded_sparse_2x4": dict(placement="sharded_sparse",
+                               mesh_shape=(2, 4)),
+    "sharded_sparse_2x4_mod": dict(placement="sharded_sparse",
+                                   mesh_shape=(2, 4), scheme="mod"),
+    "dense_substrate_bf16": dict(placement="substrate",
+                                 compute_dtype="bfloat16"),
+}
+
+
+def main(argv):
+    names = argv[1:] or list(CASES)
+    for name in names:
+        print(json.dumps(run_case(name, **CASES[name])), flush=True)
+
+
+if __name__ == "__main__":
+    main(sys.argv)

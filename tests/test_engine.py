@@ -1,0 +1,365 @@
+"""Compiled training engine (repro.train.engine): scan-vs-eager exactness,
+carry donation, the prefetcher's ordering/error contract, mixed-precision
+AUC tolerance, padded batched eval, the tail-drop note, and the CI
+throughput smoke — plus the full placement matrix under 8 virtual devices
+in a subprocess.
+
+The contract under test: ``train_ctr(..., engine="scan")`` consumes the
+exact shuffle order of the eager loop and scans the same traced step body,
+so K scanned steps bit-match K eager steps (params, opt_state, per-step
+aux) on every placement, while one dispatch covers K updates and the host
+side runs one chunk ahead on a worker thread.
+"""
+
+import json
+import logging
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_train_step, scale_hyperparams
+from repro.data import prefetch as prefetch_lib
+from repro.data.synthetic import iterate_batches, make_ctr_dataset
+from repro.models import ctr
+from repro.train import engine as engine_lib
+from repro.train import train_ctr
+from repro.train.loop import make_eval_fn
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+VOCABS = (300, 1000, 50)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_ctr_dataset(12_000, VOCABS, n_dense=4, zipf_a=1.15, seed=0)
+
+
+def _cfg(**kw):
+    return ctr.CTRConfig(name="deepfm", vocab_sizes=VOCABS, n_dense=4,
+                         emb_dim=8, mlp_dims=(32, 32, 32), emb_sigma=1e-2,
+                         **kw)
+
+
+def _hp(batch=512):
+    return scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-5,
+                             base_batch=batch, batch_size=batch,
+                             base_dense_lr=2e-3)
+
+
+def _bitwise_equal(a_tree, b_tree):
+    return all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(a_tree), jax.tree.leaves(b_tree)))
+
+
+# ---------------------------------------------------------------------------
+# scan-vs-eager exactness (single device, in process)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", ["substrate", "fused", "sparse"])
+def test_scan_chunk_bitmatches_eager_steps(dataset, path):
+    cfg = _cfg(sparse=path == "sparse")
+    bundle = build_train_step(cfg, _hp(), path=path, warmup_steps=0)
+    params0 = ctr.init(jax.random.key(0), cfg)
+    k = 3
+    batches = list(iterate_batches(dataset, 512, seed=7))[:k]
+    chunk = {key: jnp.asarray(np.stack([b[key] for b in batches]))
+             for key in batches[0]}
+
+    pe = bundle.prepare(jax.tree.map(jnp.copy, params0))
+    se = bundle.init(pe)
+    aux_eager = []
+    for b in batches:
+        pe, se, a = bundle.step(
+            pe, se, {key: jnp.asarray(v) for key, v in b.items()})
+        aux_eager.append(a)
+
+    ps = bundle.prepare(jax.tree.map(jnp.copy, params0))
+    ss = bundle.init(ps)
+    runner = engine_lib.make_chunk_runner(bundle.scan_step)
+    ps, ss, aux_stack = runner(ps, ss, chunk)
+
+    assert _bitwise_equal(pe, ps)
+    assert _bitwise_equal(se, ss)
+    for i in range(k):
+        assert np.array_equal(np.asarray(aux_stack["loss"][i]),
+                              np.asarray(aux_eager[i]["loss"]))
+
+
+def test_chunk_runner_donates_carry(dataset):
+    """The scanned carry is donated: after a chunk, every buffer of the
+    input (params, opt_state) is deleted — no table-sized copies retained."""
+    cfg = _cfg()
+    bundle = build_train_step(cfg, _hp(), path="substrate", warmup_steps=0)
+    params = ctr.init(jax.random.key(0), cfg)
+    state = bundle.init(params)
+    b = next(iterate_batches(dataset, 512, seed=3))
+    chunk = {k: jnp.asarray(np.stack([v, v])) for k, v in b.items()}
+    runner = engine_lib.make_chunk_runner(bundle.scan_step)
+    carry_leaves = jax.tree.leaves((params, state))
+    chunk_leaves = jax.tree.leaves(chunk)
+    new_params, new_state, _ = runner(params, state, chunk)
+    assert all(x.is_deleted() for x in carry_leaves)
+    # the chunk itself is NOT donated (prefetched buffers stay reusable)
+    assert not any(x.is_deleted() for x in chunk_leaves)
+    assert not any(x.is_deleted() for x in jax.tree.leaves(new_params))
+
+
+def test_train_ctr_scan_equals_eager_with_max_steps(dataset):
+    """Full driver equivalence, including an epoch tail chunk (k <
+    scan_steps) and a max_steps cut that is not a chunk multiple."""
+    tr, te = dataset.split(0.9)
+    cfg = _cfg()
+    results = {}
+    for eng in ("eager", "scan"):
+        bundle = build_train_step(cfg, _hp(), path="substrate",
+                                  warmup_steps=0)
+        results[eng] = train_ctr(
+            cfg, None, tr, te, batch_size=512, epochs=2, seed=0,
+            step_bundle=bundle, max_steps=23, engine=eng, scan_steps=4)
+    a, b = results["eager"], results["scan"]
+    assert a.steps == b.steps == 23
+    assert _bitwise_equal(a.params, b.params)
+    assert _bitwise_equal(a.opt_state, b.opt_state)
+    assert a.final_eval["auc"] == b.final_eval["auc"]
+
+
+def test_train_ctr_rejects_unknown_engine(dataset):
+    tr, _ = dataset.split(0.9)
+    with pytest.raises(ValueError, match="unknown engine"):
+        train_ctr(_cfg(), None, tr, None, batch_size=512,
+                  step_bundle=build_train_step(_cfg(), _hp(),
+                                               path="substrate"),
+                  engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# prefetcher contract
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_epoch_replays_iterate_batches_order(dataset):
+    """chunk_epoch's stacked chunks are exactly iterate_batches's batches,
+    in order — the property that makes scan == eager bitwise."""
+    flat = [b for b in iterate_batches(dataset, 512, seed=11)]
+    chunks = list(prefetch_lib.chunk_epoch(dataset, 512, 4, seed=11))
+    # tail chunk carries the leftover batches
+    assert [c["labels"].shape[0] for c in chunks][-1] == len(flat) % 4 or \
+        len(flat) % 4 == 0
+    i = 0
+    for c in chunks:
+        for j in range(c["labels"].shape[0]):
+            for key in ("ids", "dense", "labels"):
+                np.testing.assert_array_equal(c[key][j], flat[i][key])
+            i += 1
+    assert i == len(flat)
+
+
+def test_chunk_epoch_rejects_keep_remainder(dataset):
+    with pytest.raises(ValueError, match="drop_remainder"):
+        list(prefetch_lib.chunk_epoch(dataset, 512, 4, drop_remainder=False))
+
+
+def test_prefetch_orders_and_propagates_errors():
+    items = list(prefetch_lib.prefetch(iter(range(20)), to_device=False))
+    assert items == list(range(20))
+
+    def boom():
+        yield 1
+        raise RuntimeError("worker failed")
+
+    with pytest.raises(RuntimeError, match="worker failed"):
+        list(prefetch_lib.prefetch(boom(), to_device=False))
+
+
+def test_prefetch_early_close_stops_worker():
+    produced = []
+
+    def gen():
+        for i in range(1000):
+            produced.append(i)
+            yield i
+
+    it = prefetch_lib.prefetch(gen(), buffer_size=2, to_device=False)
+    assert next(it) == 0
+    it.close()
+    time.sleep(0.3)
+    n = len(produced)
+    time.sleep(0.2)
+    assert len(produced) == n    # worker stopped, not still draining
+
+
+# ---------------------------------------------------------------------------
+# remainder note
+# ---------------------------------------------------------------------------
+
+
+def test_tail_drop_noted_once(dataset, caplog):
+    from repro.data import synthetic
+
+    synthetic._noted_remainders.discard((len(dataset), 7))
+    with caplog.at_level(logging.WARNING, logger="repro.data.synthetic"):
+        list(iterate_batches(dataset, 7))
+        list(iterate_batches(dataset, 7))
+    notes = [r for r in caplog.records if "tail" in r.getMessage()]
+    assert len(notes) == 1
+    # keeping the tail emits nothing
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.data.synthetic"):
+        list(iterate_batches(dataset, 7, drop_remainder=False))
+    assert not [r for r in caplog.records if "tail" in r.getMessage()]
+
+
+# ---------------------------------------------------------------------------
+# batched eval
+# ---------------------------------------------------------------------------
+
+
+def test_eval_batched_padding_exact(dataset):
+    """The fixed-shape padded eval scores every row exactly once: same AUC
+    and logloss as one whole-set forward, any batch size, plus a
+    throughput figure."""
+    cfg = _cfg()
+    params = ctr.init(jax.random.key(1), cfg)
+    _, te = dataset.split(0.9)          # 1200 rows: not a 512 multiple
+    ref_scores = np.asarray(
+        ctr.apply(params, cfg, jnp.asarray(te.ids), jnp.asarray(te.dense)))
+    ref_ll = float(np.mean(np.logaddexp(0.0, ref_scores)
+                           - te.labels * ref_scores))
+    from repro.train.metrics import auc_numpy
+
+    ev = make_eval_fn(cfg)(params, te, batch_size=512)
+    assert ev["auc"] == pytest.approx(auc_numpy(ref_scores, te.labels),
+                                      abs=1e-9)
+    assert ev["logloss"] == pytest.approx(ref_ll, abs=1e-6)
+    assert ev["eval_rows_per_sec"] > 0
+    # batch larger than the set degrades to one padded slice
+    ev2 = make_eval_fn(cfg)(params, te, batch_size=4096)
+    assert ev2["auc"] == pytest.approx(ev["auc"], abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# bf16 mixed precision
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_activations_f32_masters(dataset):
+    """Under compute_dtype=bfloat16 the forward's logits and loss stay f32,
+    gradients come back f32, and a trained step leaves params f32."""
+    cfg = _cfg(compute_dtype="bfloat16")
+    params = ctr.init(jax.random.key(0), cfg)
+    logits = ctr.apply(params, cfg, jnp.asarray(dataset.ids[:64]),
+                       jnp.asarray(dataset.dense[:64]))
+    assert logits.dtype == jnp.float32
+    g = jax.grad(lambda p: ctr.apply(p, cfg, jnp.asarray(dataset.ids[:64]),
+                                     jnp.asarray(dataset.dense[:64])).sum())(
+        params)
+    assert all(x.dtype == jnp.float32 for x in jax.tree.leaves(g))
+
+
+def test_bf16_auc_within_tolerance(dataset):
+    """Acceptance criterion: bf16 CTR training matches fp32 final AUC
+    within 2e-3 on the synthetic exactness harness."""
+    tr, te = dataset.split(0.9)
+    aucs = {}
+    for dtype in ("float32", "bfloat16"):
+        cfg = _cfg(compute_dtype=dtype)
+        bundle = build_train_step(cfg, _hp(), path="substrate",
+                                  warmup_steps=0)
+        res = train_ctr(cfg, None, tr, te, batch_size=512, epochs=2, seed=0,
+                        step_bundle=bundle, engine="scan", scan_steps=4)
+        aucs[dtype] = res.final_eval["auc"]
+    assert abs(aucs["bfloat16"] - aucs["float32"]) <= 2e-3, aucs
+
+
+# ---------------------------------------------------------------------------
+# throughput smoke (CI tier-1)
+# ---------------------------------------------------------------------------
+
+
+def test_scan_throughput_at_least_eager(dataset):
+    """CI smoke: scan x4 throughput >= 0.9x eager on the synthetic set (the
+    generous floor absorbs CI noise; the real margin is measured at vocab
+    1M by benchmarks.run --engine-bench)."""
+    cfg = _cfg()
+    hp = _hp()
+    timings = {}
+    for eng in ("eager", "scan"):
+        bundle = build_train_step(cfg, hp, path="substrate", warmup_steps=0)
+        params = ctr.init(jax.random.key(0), cfg)
+        state = bundle.init(params)
+        if eng == "eager":
+            it = iterate_batches(dataset, 512, seed=0)
+            for _ in range(4):      # warm + compile
+                b = {k: jnp.asarray(v) for k, v in next(it).items()}
+                params, state, _ = bundle.step(params, state, b)
+            jax.block_until_ready(params)
+            t0 = time.perf_counter()
+            for _ in range(12):
+                b = {k: jnp.asarray(v) for k, v in next(it).items()}
+                params, state, _ = bundle.step(params, state, b)
+            jax.block_until_ready(params)
+            timings[eng] = (time.perf_counter() - t0) / 12
+        else:
+            runner = engine_lib.make_chunk_runner(bundle.scan_step)
+            chunks = prefetch_lib.prefetch_chunks(dataset, 512, 4, seed=0)
+            t0 = n = 0
+            for i, chunk in enumerate(chunks):
+                if chunk["labels"].shape[0] != 4:
+                    break
+                params, state, _ = runner(params, state, chunk)
+                if i == 0:          # warm + compile
+                    jax.block_until_ready(params)
+                    t0 = time.perf_counter()
+                else:
+                    n += 4
+                if n >= 12:
+                    break
+            jax.block_until_ready(params)
+            timings[eng] = (time.perf_counter() - t0) / n
+    ratio = timings["eager"] / timings["scan"]
+    assert ratio >= 0.9, timings
+
+
+# ---------------------------------------------------------------------------
+# multi-device placement matrix (8 virtual devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+CASES = ["dense_substrate", "dense_fused", "sparse", "sharded_2x4",
+         "sharded_sparse_2x4", "sharded_sparse_2x4_mod",
+         "dense_substrate_bf16"]
+
+
+@pytest.fixture(scope="module")
+def engine_records():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)   # the driver sets its own 8-device flag
+    script = os.path.join(REPO, "tests", "engine_exactness_main.py")
+    proc = subprocess.run([sys.executable, script] + CASES, env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    recs = [json.loads(line) for line in proc.stdout.strip().splitlines()
+            if line.startswith("{")]
+    return {r["name"]: r for r in recs}
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_scan_bitmatches_eager_all_placements(engine_records, case):
+    """Acceptance criterion: K scanned steps bit-match K eager steps
+    (params, opt_state, aux) for every placement on the 8-virtual-device
+    mesh, with the carry donated (no retained buffers)."""
+    rec = engine_records[case]
+    assert rec["params_bitwise_equal"], rec
+    assert rec["state_bitwise_equal"], rec
+    assert rec["aux_bitwise_equal"], rec
+    assert rec["carry_donated"], rec
+    assert all(np.isfinite(x) for x in rec["losses"]), rec
