@@ -164,17 +164,32 @@ def sparse_embedding_bench(
                 sparse_fn,
                 (jnp.copy(w), jnp.copy(m), jnp.copy(v), jnp.copy(ls)),
                 (uids, cnt, g_rows, step))
+            # run-length flatness: the same update with every gathered row
+            # carrying ~10_000 pending decay steps (last_step still 0,
+            # step deep in the run). The closed-form catch-up makes this
+            # one multiply regardless of depth, so deep_us ~ sparse_us —
+            # the replay it replaced grew linearly in the step count.
+            deep_us = timeit(
+                sparse_fn,
+                (jnp.copy(w), jnp.copy(m), jnp.copy(v), jnp.copy(ls)),
+                (uids, cnt, g_rows, jnp.asarray(10_000, jnp.int32)))
             rec = {"vocab": vocab, "batch": batch, "n_unique": n_unique,
                    "dense_us": dense_us, "sparse_us": sparse_us,
+                   "sparse_deep_step_us": deep_us,
+                   "depth_flatness": deep_us / max(sparse_us, 1e-9),
                    "speedup": dense_us / max(sparse_us, 1e-9)}
             records.append(rec)
             rows.append(_csv(
                 f"sparse_embed/v{vocab}/b{batch}", sparse_us,
                 f"dense_us={dense_us:.1f};n_unique={n_unique};"
-                f"speedup={rec['speedup']:.1f}x"))
+                f"speedup={rec['speedup']:.1f}x;"
+                f"depth_flatness={rec['depth_flatness']:.2f}"))
+
+    from repro.core.optim import catchup_mode
 
     with open(out_path, "w") as f:
-        json.dump({"dim": dim, "records": records}, f, indent=2)
+        json.dump({"dim": dim, "catchup_mode": catchup_mode(1e-3, 1e-4),
+                   "records": records}, f, indent=2)
     print(f"[sparse_embedding_bench] wrote {out_path}")
     return rows
 
@@ -380,10 +395,14 @@ def hybrid_embedding_bench(
         return total
 
     records, rows = [], []
+    catchup = None
     for vocab in vocabs:
         cfg, hp, batch_data = _sharded_bench_case(vocab, batch)
         params0 = ctr_lib.init(jax.random.key(0), cfg)
         mesh = jax.make_mesh((1, n_model), ("data", "model"))
+        if catchup is None:
+            from repro.core.optim import catchup_mode
+            catchup = catchup_mode(hp.emb_lr, hp.emb_l2)
 
         by_placement = {}
         for placement in ("sharded", "sharded_sparse"):
@@ -417,6 +436,9 @@ def hybrid_embedding_bench(
                    # ids all-gathered instead of the raw batch) and the
                    # slot-level O(capacity) row-grad assembly landed
                    "dedup": "staged_unique_allgather+slot_rowgrad",
+                   # closed-form vs windowed-replay lazy-decay catch-up
+                   # (repro.core.optim.catchup_mode for this grid's hp)
+                   "catchup_mode": catchup,
                    "records": records}, f, indent=2)
     print(f"[hybrid_embedding_bench] wrote {out_path}")
     return rows
@@ -434,13 +456,12 @@ def _engine_bench_dataset(vocab: int, n_rows: int):
     return CTRDataset(ids, dense, labels, (vocab, 10_000))
 
 
-# Engines must be timed at MATCHED step counts: the sparse-family step's
-# lazy-decay catch-up replays each gathered row's pending decay, so its
-# cost grows with the optimizer step t early in training (a first-touch id
-# at step t replays t iterations) — timing one engine at t~8 against the
-# other at t~48 would misattribute that growth to the engine. Each config
-# is timed as the MIN over _N_REPS back-to-back windows: contention on the
-# shared CI container only ever inflates a window, never deflates it.
+# Each config is timed as the MIN over _N_REPS back-to-back windows:
+# contention on the shared CI container only ever inflates a window, never
+# deflates it. (Engines no longer need matched step counts: the lazy-decay
+# catch-up is closed-form — one multiply regardless of pending depth — so
+# step cost is flat in the optimizer step t; the sparse bench's
+# deep-step flatness record tracks exactly that.)
 _N_WARM_STEPS = 16
 _N_TIMED_STEPS = 16
 _N_REPS = 3

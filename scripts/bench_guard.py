@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Bench-regression guard for the hybrid embedding step.
+
+Compares a freshly generated BENCH_sharded_sparse.json against the
+committed baseline and fails (exit 1) if the hybrid's relative step time
+regressed: for every vocab present in both files, the fresh
+``sharded / sharded_sparse`` step-time ratio must not drop below the
+baseline ratio by more than ``--tolerance`` (relative). A ratio above 1.0
+means the hybrid step is faster than the dense-per-shard step; the guard
+protects the gap already won, not an absolute number — absolute step times
+on shared CI runners are too noisy to gate on, but the two placements run
+back-to-back on the same machine so their ratio is stable.
+
+Usage:
+    python scripts/bench_guard.py BASELINE.json FRESH.json [--tolerance 0.15]
+"""
+
+import argparse
+import json
+import sys
+
+
+def ratios(path):
+    with open(path) as f:
+        d = json.load(f)
+    by_vocab = {}
+    for r in d.get("records", []):
+        by_vocab.setdefault(r["vocab"], {})[r["placement"]] = r["step_us"]
+    out = {}
+    for vocab, t in sorted(by_vocab.items()):
+        if "sharded" in t and "sharded_sparse" in t:
+            out[vocab] = t["sharded"] / max(t["sharded_sparse"], 1e-9)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative drop in the sharded/"
+                         "sharded_sparse ratio before failing")
+    args = ap.parse_args()
+
+    base = ratios(args.baseline)
+    fresh = ratios(args.fresh)
+    if not fresh:
+        print("bench_guard: fresh file has no comparable records", file=sys.stderr)
+        return 1
+
+    failed = False
+    for vocab, fr in sorted(fresh.items()):
+        br = base.get(vocab)
+        if br is None:
+            print(f"vocab {vocab}: fresh ratio {fr:.3f}x (no baseline record)")
+            continue
+        floor = br * (1.0 - args.tolerance)
+        status = "ok" if fr >= floor else "REGRESSED"
+        print(f"vocab {vocab}: sharded/sharded_sparse ratio "
+              f"{fr:.3f}x vs baseline {br:.3f}x (floor {floor:.3f}x) {status}")
+        if fr < floor:
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,15 +7,19 @@ Parameter trees across the framework are split at the top level::
 
 The optimizer runs two groups (paper Alg. 1):
 
-  embed : [CowClip | ablation-clip] -> +lambda_e * w -> Adam -> -eta_e
+  embed : [CowClip | ablation-clip] -> count-aware coupled-L2 Adam
+          (touched rows: +lambda_e * w -> Adam -> -eta_e; absent rows:
+          w *= 1 - eta_e * lambda_e, Adam moments held)
   dense : Adam (+ optional L2)      -> -eta(t) with linear warmup
 
 Order notes (faithful to the paper):
   * Clipping bounds the *task-loss* gradient; L2 is added afterwards, so ids
     absent from the batch keep decaying (the zeta lower-bound exists exactly
-    because of that decay).
-  * L2 flows *through* Adam (coupled, as in the paper's TF implementation),
-    not decoupled AdamW-style.
+    because of that decay). Absent-row decay is geometric on the weight
+    (not routed through Adam), which is what gives the sparse placements
+    their O(1) closed-form catch-up (core/optim.py decay section).
+  * On touched rows L2 flows *through* Adam (coupled, as in the paper's TF
+    implementation), not decoupled AdamW-style.
 """
 
 from __future__ import annotations
@@ -116,10 +120,12 @@ def build_optimizer(
         embed_steps.append(
             cc.make_clip_transform(clip_kind, r=r, zeta=zeta, clip_t=clip_t)
         )
-    if hp.emb_l2:
-        embed_steps.append(optim.add_decayed_weights(hp.emb_l2))
-    embed_steps.append(optim.scale_by_adam(b1=b1, b2=b2, eps=eps))
-    embed_steps.append(optim.scale_by_neg_lr(hp.emb_lr))
+    # count-aware tail: coupled-L2 Adam on touched rows, one geometric
+    # decay step (w *= 1 - lr*l2, moments held) on absent rows — the dense
+    # counterpart of the sparse paths' O(1) closed-form lazy catch-up
+    embed_steps.append(
+        optim.lazy_coupled_adam(hp.emb_lr, hp.emb_l2, b1=b1, b2=b2, eps=eps)
+    )
     embed_tx = optim.chain(*embed_steps)
 
     dense_tx = dense_tower_tx(hp, warmup_steps=warmup_steps, b1=b1, b2=b2,

@@ -44,7 +44,7 @@ except ImportError:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 from ..core.cowclip import cowclip_table
-from ..core.optim import sparse_adam_rows
+from ..core.optim import decay_factor, sparse_adam_rows
 
 SCHEMES = ("div", "mod")
 
@@ -114,7 +114,8 @@ def make_plans(vocab_sizes: Sequence[int], n_shards: int,
 def pad_rows(table: jnp.ndarray, padded_vocab: int) -> jnp.ndarray:
     """Zero-pad a [vocab, dim] table to [padded_vocab, dim]. Pad rows start
     at zero and stay there: they get zero gradient and zero counts, and the
-    coupled-L2 decay of an exactly-zero row is zero under Adam."""
+    geometric coupled-L2 decay of an exactly-zero row is zero
+    (``0 * (1 - lr*l2)^k == 0``)."""
     extra = padded_vocab - table.shape[0]
     if extra == 0:
         return table
@@ -185,6 +186,27 @@ def lookup_partial(shard: jnp.ndarray, ids_col: jnp.ndarray,
     return jnp.where(mine[:, None], rows, jnp.zeros_like(rows))
 
 
+def decayed_lookup_partial(shard: jnp.ndarray, ls_shard: jnp.ndarray,
+                           ids_col: jnp.ndarray, plan: RowShardPlan,
+                           step: jnp.ndarray, factor: float,
+                           axis_name: str = "model") -> jnp.ndarray:
+    """``lookup_partial`` with the row's pending lazy-L2 decay applied
+    inline: each owned id's row is multiplied by ``factor**k`` where
+    ``k = (step - 1) - last_step[row]`` pending decay-only steps — exactly
+    the closed-form catch-up (``core.optim.decay_catchup_rows``), fused into
+    the gather so the forward can read *raw* tables. This is what decouples
+    the tower forward from the update path's dedup/collectives in the
+    sharded_sparse step: nothing has to be scattered into the table before
+    the lookup. ``k == 0`` multiplies by exactly 1.0, so caught-up rows pass
+    through bit-identically."""
+    mine, local = owned_mask_and_rows(ids_col, plan, axis_name)
+    rows = jnp.take(shard, local, axis=0)                    # [b_loc, dim]
+    k = ((step - 1) - jnp.take(ls_shard, local)).astype(jnp.float32)
+    scale = jnp.where(k > 0, jnp.float32(factor) ** k, jnp.float32(1.0))
+    rows = rows * scale[:, None]
+    return jnp.where(mine[:, None], rows, jnp.zeros_like(rows))
+
+
 def rowgrad_partial(g_col: jnp.ndarray, ids_col: jnp.ndarray,
                     plan: RowShardPlan, axis_name: str = "model") -> jnp.ndarray:
     """Scatter the embedding cotangent [b_loc, dim] onto this shard's rows
@@ -210,21 +232,31 @@ def shard_update(w: jnp.ndarray, g: jnp.ndarray, cnt: jnp.ndarray,
                  clip: bool = True, r: float = 1.0, zeta: float = 1e-5,
                  lr: float = 1e-4, l2: float = 1e-5, b1: float = 0.9,
                  b2: float = 0.999, eps: float = 1e-8):
-    """The dense embedding-optimizer chain (CowClip -> coupled L2 -> Adam ->
-    apply) on one table shard. Entirely row-local: identical math to the
-    substrate chain restricted to this shard's rows, so the sharded step
-    matches the single-device dense path to float32 tolerance."""
+    """The dense embedding-optimizer chain on one table shard. Entirely
+    row-local: identical math to the substrate chain restricted to this
+    shard's rows, so the sharded step matches the single-device dense path
+    to float32 tolerance. Count-aware like ``core.optim.lazy_coupled_adam``:
+    touched rows (cnt > 0) run CowClip -> coupled L2 -> Adam; absent rows
+    take one geometric decay step ``w *= 1 - lr*l2`` with the Adam moments
+    held."""
     w32 = w.astype(jnp.float32)
     g32 = g.astype(jnp.float32)
+    m32 = m.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
     if clip:
         g32 = cowclip_table(g32, w32, cnt, r=r, zeta=zeta)
-    w2, m2, v2 = sparse_adam_rows(g32, w32, m, v, step,
+    w2, m2, v2 = sparse_adam_rows(g32, w32, m32, v32, step,
                                   lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+    touched = (cnt > 0.0)[:, None]
+    w2 = jnp.where(touched, w2, w32 * jnp.float32(decay_factor(lr, l2)))
+    m2 = jnp.where(touched, m2, m32)
+    v2 = jnp.where(touched, v2, v32)
     return w2.astype(w.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
 
 
 def batch_forward_backward(cfg, plans, fwd_tables, dense_params,
-                           ids, feats, labels, n_data: int):
+                           ids, feats, labels, n_data: int, *,
+                           last_steps=None, step=None, factor=None):
     """The per-device forward/backward shared by both sharded train steps.
 
     Masked local lookup of each field (+psum over "model" to assemble the
@@ -234,6 +266,14 @@ def batch_forward_backward(cfg, plans, fwd_tables, dense_params,
     explicitly by the caller via ``rowgrad_partial``), loss and dense-tower
     grads psum'd over "data".
 
+    With ``last_steps``/``step``/``factor`` (the lazy-decay placements) the
+    lookup applies each row's pending decay inline
+    (``decayed_lookup_partial``): ``fwd_tables`` are then the *raw* shards
+    and the assembled embedding is still exact — since the gradient is taken
+    w.r.t. the assembled embedding, not the table, the inline multiply
+    changes nothing downstream, while freeing the forward from any
+    data-dependence on pre-forward catch-up scatters.
+
     Returns ``(loss, g_emb, g_lin, g_dense)``; ``g_lin`` is None for
     models without the first-order LR stream.
     """
@@ -242,31 +282,46 @@ def batch_forward_backward(cfg, plans, fwd_tables, dense_params,
     n_fields = cfg.n_fields
     b_global = ids.shape[0] * n_data
 
-    def partial_lookup(tables):
-        cols = [lookup_partial(tables[f"field_{i}"], ids[:, i],
-                               plans[f"field_{i}"])
-                for i in range(n_fields)]
+    def partial_lookup(tables, ls_tables):
+        if ls_tables is None:
+            cols = [lookup_partial(tables[f"field_{i}"], ids[:, i],
+                                   plans[f"field_{i}"])
+                    for i in range(n_fields)]
+        else:
+            cols = [decayed_lookup_partial(
+                        tables[f"field_{i}"], ls_tables[f"field_{i}"],
+                        ids[:, i], plans[f"field_{i}"], step, factor)
+                    for i in range(n_fields)]
         return jnp.stack(cols, axis=1)                   # [b_loc, F, dim]
 
-    emb = jax.lax.psum(partial_lookup(fwd_tables["fm"]), "model")
-    lin_emb = (jax.lax.psum(partial_lookup(fwd_tables["lin"]), "model")
-               if "lin" in fwd_tables else None)
+    def ls_group(g):
+        return None if last_steps is None else last_steps[g]
+
+    with jax.named_scope("embed_lookup_psum"):
+        emb = jax.lax.psum(partial_lookup(fwd_tables["fm"], ls_group("fm")),
+                           "model")
+        lin_emb = (jax.lax.psum(
+                       partial_lookup(fwd_tables["lin"], ls_group("lin")),
+                       "model")
+                   if "lin" in fwd_tables else None)
 
     def loss_fn(emb_args, dense_p):
         e, le = emb_args
         logits = ctr_lib._forward_from_emb(dense_p, cfg, e, le, feats)
         return jnp.sum(jax.nn.softplus(logits) - labels * logits) / b_global
 
-    if lin_emb is None:
-        loss_loc, ((g_emb, _), g_dense) = jax.value_and_grad(
-            loss_fn, argnums=(0, 1))((emb, None), dense_params)
-        g_lin = None
-    else:
-        loss_loc, ((g_emb, g_lin), g_dense) = jax.value_and_grad(
-            loss_fn, argnums=(0, 1))((emb, lin_emb), dense_params)
+    with jax.named_scope("tower_fwd_bwd"):
+        if lin_emb is None:
+            loss_loc, ((g_emb, _), g_dense) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1))((emb, None), dense_params)
+            g_lin = None
+        else:
+            loss_loc, ((g_emb, g_lin), g_dense) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1))((emb, lin_emb), dense_params)
 
-    loss = jax.lax.psum(loss_loc, "data")
-    g_dense = jax.lax.psum(g_dense, "data")
+    with jax.named_scope("loss_dense_psum"):
+        loss = jax.lax.psum(loss_loc, "data")
+        g_dense = jax.lax.psum(g_dense, "data")
     return loss, g_emb, g_lin, g_dense
 
 

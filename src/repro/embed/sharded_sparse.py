@@ -20,24 +20,30 @@ shard owns, composing the two prior placements:
   single-stage ``owned_unique_local`` oracle). Every data slice of a shard
   agrees on the slots without a dedicated collective and the sort stays
   out of the SPMD partitioner.
-* Touched rows are gathered, their pending coupled-L2 decay replayed via a
-  per-row ``last_step`` (the sparse path's lazy-decay contract), then the
-  fused CowClip/L2/Adam row update runs and scatters back — row-local and
-  collective-free, exactly like the dense per-shard update it replaces.
+* After the backward, the touched rows are gathered from the *raw* shard,
+  their pending coupled-L2 decay applied in one closed-form multiply
+  (``w *= (1 - lr*l2)**k`` via the per-row ``last_step`` — the sparse
+  path's lazy-decay contract, O(1) in pending depth), then the fused
+  CowClip/L2/Adam row update runs and scatters back — row-local and
+  collective-free, exactly like the dense per-shard update it replaces
+  (``update_phase``).
 * **Overflow** (more distinct owned ids than capacity — impossible at the
   default ``capacity = min(batch, rows_per_shard)``): the shard falls back
-  to the dense per-shard update for that step (catch-up of *all* its rows,
-  then the PR-2 ``shard_update``), so the hybrid stays exact instead of
-  dropping gradient contributions the way the single-device sparse path
+  to the dense per-shard update for that step (closed-form catch-up of
+  *all* its rows, then ``shard_update``), so the hybrid stays exact instead
+  of dropping gradient contributions the way the single-device sparse path
   does. The fallback is per (field, shard) and is reported/logged by the
   train step.
 
 Forward lookup and row-grad/count assembly reuse ``repro.embed.sharded``'s
-masked-psum building blocks unchanged (``lookup_partial`` + psum over
-"model"; ``rowgrad_partial``/``counts_partial`` + psum over "data") — the
-only difference is that the forward reads rows with their pending decay
-already applied, which ``catchup_phase`` guarantees by scattering the
-caught-up rows into the shard before the lookup.
+masked-psum building blocks (``decayed_lookup_partial`` + psum over
+"model"; ``rowgrad_slots``/``counts_partial`` + psum over "data"). The
+forward reads the *raw* tables and applies each row's pending decay inline
+during the gather — nothing is scattered into the shard before the lookup,
+so the tower forward/backward has no data-dependence on the update path's
+dedup or collectives and XLA is free to overlap them (the train step issues
+the dedup all-gathers before the forward and every row-grad psum before any
+row update).
 """
 
 from __future__ import annotations
@@ -265,87 +271,68 @@ def _gather_catchup_rows(w, m, v, ls, uloc, counts, t, *, use_kernel,
         w, m, v, ls[su], su, t, interpret=interpret, **adam_kw)
 
 
-def catchup_phase(w, m, v, ls, uloc, counts, overflow, t, *, use_kernel,
-                  interpret, lr, l2, b1=0.9, b2=0.999, eps=1e-8):
-    """Pre-forward phase on one (field, group) shard: make the rows the
-    forward will read exact.
-
-    Sparse branch: gather the touched rows, replay their pending lazy decay,
-    scatter the caught-up weights back so the masked lookup sees them.
-    Overflow branch: catch up *every* row of the shard (the dense fallback
-    needs the whole shard current anyway).
-
-    Returns ``(w_fwd, m_base, v_base, w_rows, m_rows, v_rows)`` — the
-    [rows_per_shard, ...] tensors the forward/update start from plus the
-    caught-up [capacity, dim] rows (gathered from the caught tables on the
-    overflow branch so both branches shape-match under ``lax.cond``).
-
-    ``overflow`` may be the static ``False`` (capacity equals the exact
-    per-shard default, so overflow is impossible): the fallback branch is
-    then never traced.
-    """
-    kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
-    rows = w.shape[0]
-    safe = jnp.minimum(uloc, rows - 1)
-
-    def sparse_branch(_):
-        wc, mc, vc = _gather_catchup_rows(
-            w, m, v, ls, uloc, counts, t, use_kernel=use_kernel,
-            interpret=interpret, **kw)
-        w_fwd = w.at[uloc].set(wc.astype(w.dtype), mode="drop")
-        return w_fwd, m, v, wc, mc, vc
-
-    if overflow is False:
-        return sparse_branch(None)
-
-    def dense_branch(_):
-        wc, mc, vc = decay_catchup_rows(w, m, v, ls, t - 1, **kw)
-        wc = wc.astype(w.dtype)
-        return wc, mc, vc, wc[safe], mc[safe], vc[safe]
-
-    return jax.lax.cond(overflow, dense_branch, sparse_branch, None)
+def catchup_depth_slots(ls, uloc, counts, t):
+    """Max pending-decay depth over this shard's touched slots at step ``t``
+    — the ``aux["catchup_depth_max"]`` diagnostic. A slot touched last step
+    has depth 0; a first-touch slot has depth t-1. Pad slots (count 0)
+    contribute 0."""
+    safe = jnp.minimum(uloc, ls.shape[0] - 1)
+    k = (t - 1) - jnp.take(ls, safe)
+    return jnp.max(jnp.where(counts > 0, k, 0)).astype(jnp.int32)
 
 
-def update_phase(w_fwd, m_base, v_base, ls, w_rows, m_rows, v_rows,
-                 uloc, counts, overflow, g_slots, g_full, cnt_full, t, *,
-                 use_kernel, interpret, clip=True, r=1.0, zeta=1e-5,
-                 lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8):
-    """Post-backward phase on one (field, group) shard.
+def update_phase(w, m, v, ls, uloc, counts, overflow, g_slots, g_full,
+                 cnt_full, t, *, use_kernel, interpret, clip=True, r=1.0,
+                 zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8):
+    """Post-backward phase on one (field, group) shard, starting from the
+    *raw* (w, m, v, ls) tensors — the forward never scatters into them
+    (its lookup applies pending decay inline), so this phase owns the whole
+    gather -> closed-form catch-up -> CowClip/L2/Adam -> scatter chain.
 
-    Sparse branch: take the psum'd row gradient at the touched slots —
-    ``g_slots`` ([capacity, dim], from ``rowgrad_slots``) when overflow is
-    statically impossible, else gathered from the full-row ``g_full`` —
-    run CowClip -> coupled L2 -> Adam on the caught-up rows, scatter back,
+    Sparse branch: gather the touched rows and apply their pending decay in
+    one closed-form multiply, take the psum'd row gradient at the touched
+    slots — ``g_slots`` ([capacity, dim], from ``rowgrad_slots``) when
+    overflow is statically impossible, else gathered from the full-row
+    ``g_full`` — run CowClip -> coupled L2 -> Adam on the caught-up rows,
+    scatter back into the raw tables (untouched rows stay byte-identical),
     and stamp ``last_step = t`` on the touched rows only (everything else
-    keeps accruing lazy decay). Overflow branch: the PR-2 dense per-shard
-    update over the fully-caught-up shard, ``last_step = t`` everywhere.
+    keeps accruing lazy decay). Overflow branch: closed-form catch-up of the
+    *whole* shard, then the dense per-shard ``shard_update``,
+    ``last_step = t`` everywhere.
 
     Returns ``(new_w, new_m, new_v, new_ls)``. ``overflow`` may be the
-    static ``False`` (see ``catchup_phase``); ``g_full``/``cnt_full`` are
-    only read by the fallback machinery and may be None when overflow is
-    impossible (``g_slots`` may in turn be None when it is not).
+    static ``False`` (capacity equals the exact per-shard default, so
+    overflow is impossible — the fallback branch is then never traced);
+    ``g_full``/``cnt_full`` are only read by the fallback machinery and may
+    be None when overflow is impossible (``g_slots`` may in turn be None
+    when it is not).
     """
-    rows = w_fwd.shape[0]
+    rows = w.shape[0]
     safe = jnp.minimum(uloc, rows - 1)
     adam_kw = dict(lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
 
     def sparse_branch(_):
-        g_rows = g_slots if g_slots is not None else g_full[safe]
-        if use_kernel:
-            su = _safe_local(uloc, counts, rows)
-            w2, m2, v2 = cc_sparse.sparse_update_scatter(
-                w_fwd, m_base, v_base, su, counts, w_rows, g_rows,
-                m_rows, v_rows, t, r=r, zeta=zeta, clip=clip,
+        with jax.named_scope("row_gather_catchup"):
+            w_rows, m_rows, v_rows = _gather_catchup_rows(
+                w, m, v, ls, uloc, counts, t, use_kernel=use_kernel,
                 interpret=interpret, **adam_kw)
-        else:
-            g32 = g_rows.astype(jnp.float32)
-            if clip:
-                g32 = cowclip_rows(g32, w_rows, counts, r=r, zeta=zeta)
-            wn, mn, vn = sparse_adam_rows(
-                g32, w_rows, m_rows, v_rows, t, **adam_kw)
-            w2 = w_fwd.at[uloc].set(wn.astype(w_fwd.dtype), mode="drop")
-            m2 = m_base.at[uloc].set(mn.astype(m_base.dtype), mode="drop")
-            v2 = v_base.at[uloc].set(vn.astype(v_base.dtype), mode="drop")
+        g_rows = g_slots if g_slots is not None else g_full[safe]
+        with jax.named_scope("row_update_scatter"):
+            if use_kernel:
+                su = _safe_local(uloc, counts, rows)
+                w2, m2, v2 = cc_sparse.sparse_update_scatter(
+                    w, m, v, su, counts, w_rows, g_rows,
+                    m_rows, v_rows, t, r=r, zeta=zeta, clip=clip,
+                    interpret=interpret, **adam_kw)
+            else:
+                g32 = g_rows.astype(jnp.float32)
+                if clip:
+                    g32 = cowclip_rows(g32, w_rows, counts, r=r, zeta=zeta)
+                wn, mn, vn = sparse_adam_rows(
+                    g32, w_rows, m_rows, v_rows, t, **adam_kw)
+                w2 = w.at[uloc].set(wn.astype(w.dtype), mode="drop")
+                m2 = m.at[uloc].set(mn.astype(m.dtype), mode="drop")
+                v2 = v.at[uloc].set(vn.astype(v.dtype), mode="drop")
         ls2 = ls.at[uloc].set(t.astype(ls.dtype), mode="drop")
         return w2, m2, v2, ls2
 
@@ -353,8 +340,10 @@ def update_phase(w_fwd, m_base, v_base, ls, w_rows, m_rows, v_rows,
         return sparse_branch(None)
 
     def dense_branch(_):
+        wc, mc, vc = decay_catchup_rows(w, m, v, ls, t - 1, **adam_kw)
+        wc = wc.astype(w.dtype)
         w2, m2, v2 = shard_update(
-            w_fwd, g_full, cnt_full, m_base, v_base, t, clip=clip,
+            wc, g_full, cnt_full, mc, vc, t, clip=clip,
             r=r, zeta=zeta, **adam_kw)
         return w2, m2, v2, jnp.full_like(ls, t)
 

@@ -16,11 +16,14 @@ TPU sublanes and the feature dim to the 128-wide lanes. All math in f32.
 
 Step math (one row, matching ``ref.py`` / ``core.cowclip`` + ``core.optim``):
 
-    clip_t = cnt * max(r * ||w||, zeta)
-    g     <- g * min(1, clip_t / ||g||)          # CowClip (Alg. 1)
-    g     <- g + l2 * w                          # coupled L2 (paper setup)
-    m     <- b1*m + (1-b1)*g ;  v <- b2*v + (1-b2)*g^2
-    w     <- w - lr * (m/(1-b1^t)) / (sqrt(v/(1-b2^t)) + eps)
+    touched (cnt > 0):
+        clip_t = cnt * max(r * ||w||, zeta)
+        g     <- g * min(1, clip_t / ||g||)      # CowClip (Alg. 1)
+        g     <- g + l2 * w                      # coupled L2 (paper setup)
+        m     <- b1*m + (1-b1)*g ;  v <- b2*v + (1-b2)*g^2
+        w     <- w - lr * (m/(1-b1^t)) / (sqrt(v/(1-b2^t)) + eps)
+    absent (cnt == 0):
+        w     <- w * (1 - lr*l2) ;  m, v unchanged    # geometric L2 decay
 """
 
 from __future__ import annotations
@@ -31,9 +34,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.optim import decay_factor
+
 
 def _kernel(bc_ref, w_ref, g_ref, cnt_ref, m_ref, v_ref,
-            w_out, m_out, v_out, *, r, zeta, lr, l2, b1, b2, eps, do_clip):
+            w_out, m_out, v_out, *, r, zeta, lr, l2, b1, b2, eps, do_clip,
+            factor):
     w = w_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
@@ -49,11 +55,14 @@ def _kernel(bc_ref, w_ref, g_ref, cnt_ref, m_ref, v_ref,
         scale = jnp.minimum(1.0, clip_t / (gnorm + 1e-30))
         g = g * scale[:, None]
 
-    g = g + l2 * w
-    m = b1 * m + (1.0 - b1) * g
-    v = b2 * v + (1.0 - b2) * g * g
-    upd = (m * bc1) / (jnp.sqrt(v * bc2) + eps)
-    w = w - lr * upd
+    gl = g + l2 * w
+    m2 = b1 * m + (1.0 - b1) * gl
+    v2 = b2 * v + (1.0 - b2) * gl * gl
+    upd = (m2 * bc1) / (jnp.sqrt(v2 * bc2) + eps)
+    touched = (cnt > 0.0)[:, None]
+    w = jnp.where(touched, w - lr * upd, w * factor)
+    m = jnp.where(touched, m2, m)
+    v = jnp.where(touched, v2, v)
 
     w_out[...] = w.astype(w_out.dtype)
     m_out[...] = m.astype(m_out.dtype)
@@ -96,6 +105,7 @@ def cowclip_adam_update(
         # paper: 1-dim LR-stream tables are exempt from CowClip (matches
         # core.cowclip.cowclip_table and ref.py)
         do_clip=dim >= 2,
+        factor=decay_factor(lr, l2),
     )
     row_block = pl.BlockSpec((block_rows, dim), lambda i: (i, 0))
     cnt_block = pl.BlockSpec((block_rows,), lambda i: (i,))

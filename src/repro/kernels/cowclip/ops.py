@@ -52,7 +52,8 @@ def sparse_gather_catchup(
     lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8, use_kernel=True,
     row_offset=0,
 ):
-    """Gather unique rows + replay pending lazy-L2 decay (through step - 1).
+    """Gather unique rows + apply pending lazy-L2 decay (through step - 1)
+    in closed form — ``w *= (1 - lr*l2)**k``, O(1) in pending depth.
 
     ``uids`` are the raw slot uids (pads out of range); remapping for the
     kernel's index maps happens here. ``row_offset`` is the shard-offset

@@ -2,9 +2,12 @@
 
 Composes the framework's own building blocks (``core.cowclip.cowclip_table``
 + coupled L2 + Adam with bias correction) so the kernels are checked against
-the exact math the optimizer substrate uses. The sparse oracles additionally
-compose ``core.optim.decay_catchup_rows`` / ``sparse_adam_rows`` — the lazy
-L2 decay semantics the unique-id path must preserve.
+the exact math the optimizer substrate uses. Rows absent from the batch
+(``cnt == 0``) take one geometric L2 decay step — ``w *= 1 - lr*l2`` with
+the Adam moments held — matching ``core.optim.lazy_coupled_adam``. The
+sparse oracles additionally compose ``core.optim.decay_catchup_rows`` /
+``sparse_adam_rows`` — the closed-form lazy-decay semantics the unique-id
+path must preserve.
 """
 
 from __future__ import annotations
@@ -12,7 +15,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ...core.cowclip import cowclip_rows, cowclip_table
-from ...core.optim import decay_catchup_rows, sparse_adam_rows
+from ...core.optim import decay_catchup_rows, decay_factor, sparse_adam_rows
 
 
 def cowclip_adam_reference(
@@ -20,16 +23,23 @@ def cowclip_adam_reference(
     r=1.0, zeta=1e-5, lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8,
 ):
     w32 = w.astype(jnp.float32)
+    m_in = m.astype(jnp.float32)
+    v_in = v.astype(jnp.float32)
     g32 = g.astype(jnp.float32)
     g32 = cowclip_table(g32, w32, cnt, r=r, zeta=zeta)
     g32 = g32 + l2 * w32
 
-    m32 = b1 * m.astype(jnp.float32) + (1.0 - b1) * g32
-    v32 = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(g32)
+    m32 = b1 * m_in + (1.0 - b1) * g32
+    v32 = b2 * v_in + (1.0 - b2) * jnp.square(g32)
     t = step.astype(jnp.float32)
     m_hat = m32 / (1.0 - b1**t)
     v_hat = v32 / (1.0 - b2**t)
-    w32 = w32 - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    touched = (cnt > 0.0)[:, None]
+    w32 = jnp.where(touched,
+                    w32 - lr * m_hat / (jnp.sqrt(v_hat) + eps),
+                    w32 * jnp.float32(decay_factor(lr, l2)))
+    m32 = jnp.where(touched, m32, m_in)
+    v32 = jnp.where(touched, v32, v_in)
     return w32.astype(w.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
 
 
@@ -42,7 +52,7 @@ def sparse_gather_catchup_reference(
     w, m, v, last_step, uids, step, *,
     lr=1e-4, l2=1e-5, b1=0.9, b2=0.999, eps=1e-8, row_offset=0,
 ):
-    """Gather unique rows and replay their pending decay-only steps.
+    """Gather unique rows and apply their pending decay in closed form.
 
     ``uids`` is [capacity] int32 (pad slots out of range — their gather
     clips to the last row and produces garbage that is masked downstream).

@@ -14,9 +14,11 @@ the forward must see rows with their pending L2 decay applied or the two
 paths diverge:
 
 * ``sparse_gather_catchup``: one pass over unique rows; for each slot, DMA
-  the id's (w, m, v) row from HBM via a scalar-prefetched index map, replay
-  its missed decay-only Adam steps (ids absent from a batch still decay
-  under coupled L2 — paper's zeta discussion), and emit the caught-up rows.
+  the id's (w, m, v) row from HBM via a scalar-prefetched index map, apply
+  its missed decay-only steps in closed form — ``w *= (1 - lr*l2)**k`` for
+  k pending steps, O(1) in k, moments held (ids absent from a batch still
+  decay under coupled L2 — paper's zeta discussion) — and emit the
+  caught-up rows.
 * ``sparse_update_scatter``: one pass over unique rows; CowClip (per-id
   count-scaled adaptive threshold) -> coupled L2 -> Adam on the row, written
   straight back to the table's HBM row through an aliased output whose index
@@ -72,31 +74,20 @@ def safe_uids(uids: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
 
 
 def _catchup_kernel(uids_ref, off_ref, w_ref, m_ref, v_ref, ls_ref, lim_ref,
-                    w_out, m_out, v_out, *, lr, l2, b1, b2, eps):
+                    w_out, m_out, v_out, *, factor):
     del uids_ref, off_ref  # consumed by the index maps
     w = w_ref[...].astype(jnp.float32)            # (1, dim)
-    m = m_ref[...].astype(jnp.float32)
-    v = v_ref[...].astype(jnp.float32)
     ls = ls_ref[0]                                # row's last-updated step
     lim = lim_ref[0]                              # catch up through this step
 
-    def body(i, wmv):
-        w, m, v = wmv
-        s = (ls + 1 + i).astype(jnp.float32)      # global step being replayed
-        g = l2 * w
-        m = b1 * m + (1.0 - b1) * g
-        v = b2 * v + (1.0 - b2) * g * g
-        mu_scale = 1.0 / (1.0 - b1**s)
-        nu_scale = 1.0 / (1.0 - b2**s)
-        w = w - lr * (m * mu_scale) / (jnp.sqrt(v * nu_scale) + eps)
-        return w, m, v
-
-    # replay even at l2 == 0: Adam momentum keeps moving a once-touched row
-    k = jnp.maximum(lim - ls, 0)
-    w, m, v = jax.lax.fori_loop(0, k, body, (w, m, v))
-    w_out[...] = w
-    m_out[...] = m
-    v_out[...] = v
+    # closed form: k pending decay-only steps collapse to one multiply
+    # (w *= factor**k, moments untouched); k == 0 multiplies by exactly 1.0
+    # so an already-caught-up row passes through bit-identically
+    k = jnp.maximum(lim - ls, 0).astype(jnp.float32)
+    scale = jnp.where(k > 0, factor**k, 1.0)
+    w_out[...] = w * scale
+    m_out[...] = m_ref[...].astype(jnp.float32)
+    v_out[...] = v_ref[...].astype(jnp.float32)
 
 
 def sparse_gather_catchup(
@@ -115,7 +106,12 @@ def sparse_gather_catchup(
     row_offset=0,             # subtracted from uids: shard's first global row
     interpret: bool = False,
 ):
-    """Fused gather + decay catch-up. Returns f32 (w_rows, m_rows, v_rows)."""
+    """Fused gather + closed-form decay catch-up, O(1) in pending depth.
+    Returns f32 (w_rows, m_rows, v_rows); m/v rows are gathered unchanged
+    (decay-only steps never move the Adam moments). b1/b2/eps are accepted
+    for hyper-dict compatibility with the update kernel."""
+    from ...core.optim import decay_factor
+
     cap = uids.shape[0]
     dim = w.shape[1]
     lim = jnp.full((cap,), step - 1, jnp.int32)
@@ -133,8 +129,8 @@ def sparse_gather_catchup(
                   scalar_by_slot, scalar_by_slot],
         out_specs=[row_by_slot, row_by_slot, row_by_slot],
     )
-    kernel = functools.partial(
-        _catchup_kernel, lr=lr, l2=l2, b1=b1, b2=b2, eps=eps)
+    del b1, b2, eps
+    kernel = functools.partial(_catchup_kernel, factor=decay_factor(lr, l2))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

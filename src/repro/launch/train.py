@@ -109,10 +109,23 @@ def run_ctr(args) -> None:
     # every placement goes through the one EmbeddingStore bundle interface
     bundle = store.make_bundle(cfg, hp, clip_kind=clip, zeta=args.zeta,
                                warmup_steps=warmup)
-    res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
-                    epochs=args.epochs, seed=args.seed, log_fn=print,
-                    step_bundle=bundle, max_steps=args.steps,
-                    engine=args.engine, scan_steps=args.scan_steps)
+    import contextlib
+
+    trace_ctx = contextlib.nullcontext()
+    if args.profile_trace:
+        # per-phase timeline of the train step: the named_scope annotations
+        # (dedup_allgather / embed_lookup_psum / tower_fwd_bwd /
+        # rowgrad_psum / row_update / ...) show up as labeled slices, so
+        # collective/compute overlap is read off the trace directly.
+        # Open the perfetto .gz under <dir>/plugins/perfetto in ui.perfetto.dev.
+        trace_ctx = jax.profiler.trace(args.profile_trace,
+                                       create_perfetto_trace=True)
+        print(f"[train] profiling to {args.profile_trace} (perfetto trace)")
+    with trace_ctx:
+        res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
+                        epochs=args.epochs, seed=args.seed, log_fn=print,
+                        step_bundle=bundle, max_steps=args.steps,
+                        engine=args.engine, scan_steps=args.scan_steps)
     print(f"[train] done: {res.steps} steps in {res.seconds:.1f}s "
           f"-> AUC {100*res.final_eval['auc']:.2f} "
           f"logloss {res.final_eval['logloss']:.4f}")
@@ -262,6 +275,9 @@ def main():
     # common
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--profile-trace", default=None, metavar="DIR",
+                    help="ctr: dump a jax.profiler trace (with a perfetto "
+                         "trace file) of the training run to DIR")
     args = ap.parse_args()
 
     if args.host_devices:

@@ -192,15 +192,25 @@ def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         uniq = ctr.unique_batch(cfg, batch["ids"])
         utree = _uniq_tree(params["embed"], uniq)
 
-        # gather + replay pending decay so the forward sees rows exactly as
-        # the dense path would at the start of step t
-        caught = jax.tree.map(
-            lambda u, w, m, v, ls: cc_kernels.sparse_gather_catchup(
-                w, m, v, ls, u.uids, u.counts, t,
-                use_kernel=use_kernel, **adam_kw),
-            utree, params["embed"], state["m"], state["v"],
-            state["last_step"], is_leaf=_is_uniq,
-        )
+        # diagnostic: deepest pending-decay catch-up among this step's
+        # touched rows (0 when every touched id was also in the last batch)
+        depth_tree = jax.tree.map(
+            lambda u, ls: jnp.max(jnp.where(
+                u.counts > 0,
+                (t - 1) - ls[jnp.minimum(u.uids, ls.shape[0] - 1)], 0)),
+            utree, state["last_step"], is_leaf=_is_uniq)
+        depth = jnp.max(jnp.stack(jax.tree.leaves(depth_tree)))
+
+        # gather + apply pending decay (closed form, O(1) in depth) so the
+        # forward sees rows exactly as the dense path would at step t
+        with jax.named_scope("row_gather_catchup"):
+            caught = jax.tree.map(
+                lambda u, w, m, v, ls: cc_kernels.sparse_gather_catchup(
+                    w, m, v, ls, u.uids, u.counts, t,
+                    use_kernel=use_kernel, **adam_kw),
+                utree, params["embed"], state["m"], state["v"],
+                state["last_step"], is_leaf=_is_uniq,
+            )
         w_rows, m_rows, v_rows = _unzip3(caught, params["embed"])
 
         loss, (g_rows, g_dense) = jax.value_and_grad(
@@ -209,16 +219,17 @@ def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
 
         # CowClip -> coupled L2 -> Adam on the touched rows, scattered back;
         # untouched rows keep accruing lazy decay via last_step
-        out = jax.tree.map(
-            lambda u, w, m, v, ls, wr, gr, mr, vr:
-            cc_kernels.sparse_update_scatter(
-                w, m, v, ls, u.uids, u.counts, wr, gr, mr, vr, t,
-                r=r, zeta=zeta, use_kernel=use_kernel, clip=clip,
-                **adam_kw),
-            utree, params["embed"], state["m"], state["v"],
-            state["last_step"], w_rows, g_rows, m_rows, v_rows,
-            is_leaf=_is_uniq,
-        )
+        with jax.named_scope("row_update_scatter"):
+            out = jax.tree.map(
+                lambda u, w, m, v, ls, wr, gr, mr, vr:
+                cc_kernels.sparse_update_scatter(
+                    w, m, v, ls, u.uids, u.counts, wr, gr, mr, vr, t,
+                    r=r, zeta=zeta, use_kernel=use_kernel, clip=clip,
+                    **adam_kw),
+                utree, params["embed"], state["m"], state["v"],
+                state["last_step"], w_rows, g_rows, m_rows, v_rows,
+                is_leaf=_is_uniq,
+            )
         outer = jax.tree.structure(params["embed"])
         inner = jax.tree.structure((0, 0, 0, 0))
         new_embed, new_m, new_v, new_ls = jax.tree.transpose(
@@ -233,7 +244,7 @@ def make_sparse_train_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
         new_state = {"step": t, "m": new_m, "v": new_v, "last_step": new_ls,
                      "dense": d_state}
         return {"embed": new_embed, "dense": new_dense}, new_state, {
-            "loss": loss}
+            "loss": loss, "catchup_depth_max": depth.astype(jnp.int32)}
 
     return jit_step(step_impl), init, _make_lazy_flush(adam_kw)
 
@@ -325,27 +336,47 @@ def make_sharded_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         # replicated along "data". Gradients come back w.r.t. the assembled
         # embeddings; the scatter onto local rows (the transpose of the
         # masked lookup) is explicit via rowgrad_partial below.
+        #
+        # Collective/compute overlap: CowClip's counts depend only on the
+        # batch ids, so every per-field count psum over "data" is issued
+        # *before* the tower forward; after the backward, every row-grad
+        # psum launches before any shard update runs. The updates are
+        # row-local and collective-free, so the scheduler can hide each
+        # reduction behind the forward (counts) or behind the other
+        # fields' optimizer math (row grads).
+        with jax.named_scope("counts_psum"):
+            cnt = {}
+            for i in range(n_fields):
+                f = f"field_{i}"
+                cnt[f] = jax.lax.psum(
+                    shard_lib.counts_partial(ids[:, i], plans[f]), "data")
+
         loss, g_emb, g_lin, g_dense = shard_lib.batch_forward_backward(
             cfg, plans, embed_sh, dense_params, ids, feats, labels, n_data)
+
+        with jax.named_scope("rowgrad_psum"):
+            g_rows = {g: {} for g in embed_sh}
+            for i in range(n_fields):
+                f = f"field_{i}"
+                for group, g_batch in (("fm", g_emb), ("lin", g_lin)):
+                    if group not in embed_sh:
+                        continue
+                    g_rows[group][f] = jax.lax.psum(
+                        shard_lib.rowgrad_partial(g_batch[:, i, :],
+                                                  ids[:, i], plans[f]),
+                        "data")
 
         new_w = {g: {} for g in embed_sh}
         new_m = {g: {} for g in embed_sh}
         new_v = {g: {} for g in embed_sh}
-        for i in range(n_fields):
-            f = f"field_{i}"
-            plan = plans[f]
-            cnt = jax.lax.psum(
-                shard_lib.counts_partial(ids[:, i], plan), "data")
-            for group, g_batch in (("fm", g_emb), ("lin", g_lin)):
-                if group not in embed_sh:
-                    continue
-                g_rows = jax.lax.psum(
-                    shard_lib.rowgrad_partial(g_batch[:, i, :], ids[:, i],
-                                              plan), "data")
-                new_w[group][f], new_m[group][f], new_v[group][f] = (
-                    shard_lib.shard_update(
-                        embed_sh[group][f], g_rows, cnt,
-                        m_sh[group][f], v_sh[group][f], t, **upd_kw))
+        with jax.named_scope("shard_update"):
+            for i in range(n_fields):
+                f = f"field_{i}"
+                for group in embed_sh:
+                    new_w[group][f], new_m[group][f], new_v[group][f] = (
+                        shard_lib.shard_update(
+                            embed_sh[group][f], g_rows[group][f], cnt[f],
+                            m_sh[group][f], v_sh[group][f], t, **upd_kw))
         return new_w, new_m, new_v, g_dense, loss
 
     smapped = shard_lib.shard_map(
@@ -410,15 +441,20 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
     update runs only on the batch ids it owns — per-shard unique-id dedup
     of the all-gathered batch ids (``embed.sharded_sparse.
     owned_unique_local``, capacity O(batch) per shard, inside the
-    shard_map), gather + lazy-L2-decay catch-up via per-row ``last_step``,
-    fused
-    CowClip/L2/Adam on the rows, scatter back. Memory scales as
-    O(vocab / n_model) per device *and* update traffic as O(batch) — the
+    shard_map), then one post-backward ``update_phase`` per (field, group):
+    gather from the raw shard + closed-form lazy-decay catch-up
+    (``w *= (1 - lr*l2)**k`` via per-row ``last_step``, O(1) in pending
+    depth), fused CowClip/L2/Adam on the rows, scatter back. Memory scales
+    as O(vocab / n_model) per device *and* update traffic as O(batch) — the
     first placement that does both (the ROADMAP hybrid).
 
-    Forward lookup and row-grad/count assembly reuse the sharded placement's
-    masked-psum blocks over "model"/"data" unchanged; the update itself is
-    row-local and collective-free on both branches. A shard whose distinct
+    Comm/compute overlap: the forward reads the *raw* tables and applies
+    each row's pending decay inline during the masked lookup
+    (``embed.sharded.decayed_lookup_partial``), so the dedup's "data"
+    all-gathers — issued before the forward — have no consumer on the
+    forward path and overlap the tower compute; after the backward, every
+    row-grad psum is issued before any (collective-free) row update runs.
+    A shard whose distinct
     owned ids exceed the capacity (only possible when
     ``cfg.unique_capacity`` caps it below the exact default) falls back to
     the dense per-shard update for that step — logged via ``jax.debug``
@@ -433,6 +469,7 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from ..core import builders as builders_lib
+    from ..core import optim as optim_lib
     from ..embed import sharded as shard_lib
     from ..embed import sharded_sparse as hybrid_lib
 
@@ -443,6 +480,7 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
     plans = shard_lib.make_plans(cfg.vocab_sizes, n_model, scheme)
     adam_kw = dict(lr=hp.emb_lr, l2=hp.emb_l2, b1=b1, b2=b2, eps=eps)
     upd_kw = dict(clip=clip, r=r, zeta=zeta, **adam_kw)
+    factor = optim_lib.decay_factor(hp.emb_lr, hp.emb_l2)
     interpret = jax.default_backend() != "tpu"
     n_fields = cfg.n_fields
 
@@ -496,50 +534,51 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         staged = n_data > 1
         dedup = {}
         gathered = {}
-        for i in range(n_fields):
-            f = f"field_{i}"
-            plan = plans[f]
-            cap = hybrid_lib.shard_capacity(plan, b_global,
-                                            cfg.unique_capacity)
-            can_overflow = cap < min(b_global, plan.rows_per_shard)
-            if staged:
-                u_slice, c_slice = hybrid_lib.slice_unique_counts(
-                    ids[:, i], plan.vocab, min(b_loc, plan.vocab))
-                gids = jax.lax.all_gather(u_slice, "data", axis=0,
-                                          tiled=True)
-                gcnts = jax.lax.all_gather(c_slice, "data", axis=0,
-                                           tiled=True)
-                uloc, cnts, ovf = hybrid_lib.owned_unique_weighted(
-                    gids, gcnts, plan, cap)
-                gathered[f] = (gids, gcnts)
-            else:
-                uloc, cnts, ovf = hybrid_lib.owned_unique_local(
-                    ids[:, i], plan, cap)
-                gathered[f] = None
-            dedup[f] = (uloc, cnts, ovf if can_overflow else False)
+        with jax.named_scope("dedup_allgather"):
+            for i in range(n_fields):
+                f = f"field_{i}"
+                plan = plans[f]
+                cap = hybrid_lib.shard_capacity(plan, b_global,
+                                                cfg.unique_capacity)
+                can_overflow = cap < min(b_global, plan.rows_per_shard)
+                if staged:
+                    u_slice, c_slice = hybrid_lib.slice_unique_counts(
+                        ids[:, i], plan.vocab, min(b_loc, plan.vocab))
+                    gids = jax.lax.all_gather(u_slice, "data", axis=0,
+                                              tiled=True)
+                    gcnts = jax.lax.all_gather(c_slice, "data", axis=0,
+                                               tiled=True)
+                    uloc, cnts, ovf = hybrid_lib.owned_unique_weighted(
+                        gids, gcnts, plan, cap)
+                    gathered[f] = (gids, gcnts)
+                else:
+                    uloc, cnts, ovf = hybrid_lib.owned_unique_local(
+                        ids[:, i], plan, cap)
+                    gathered[f] = None
+                dedup[f] = (uloc, cnts, ovf if can_overflow else False)
         n_overflow = jax.lax.psum(
             sum(jnp.sum(jnp.asarray(d[2]).astype(jnp.int32))
                 for d in dedup.values()),
             "model")
 
-        # phase 1: catch up the rows the forward will read (all rows of a
-        # shard on its overflow-fallback steps)
-        fwd = {g: {} for g in embed_sh}
-        base_m = {g: {} for g in embed_sh}
-        base_v = {g: {} for g in embed_sh}
-        rows_c = {g: {} for g in embed_sh}
-        for i in range(n_fields):
-            f = f"field_{i}"
-            uloc, cnts, ovf = dedup[f]
-            for group in embed_sh:
-                fwd[group][f], base_m[group][f], base_v[group][f], \
-                    *rows_c[group][f] = hybrid_lib.catchup_phase(
-                        embed_sh[group][f], m_sh[group][f], v_sh[group][f],
-                        ls_sh[group][f], uloc, cnts, ovf, t,
-                        use_kernel=use_kernel, interpret=interpret, **adam_kw)
+        # diagnostic: deepest pending-decay catch-up any touched slot takes
+        # this step (dedup outputs are replicated over "data", so a "model"
+        # max globalizes it)
+        depth = jax.lax.pmax(
+            jnp.max(jnp.stack([
+                hybrid_lib.catchup_depth_slots(
+                    ls_sh[group][f"field_{i}"], dedup[f"field_{i}"][0],
+                    dedup[f"field_{i}"][1], t)
+                for i in range(n_fields) for group in embed_sh])),
+            "model")
 
+        # The forward reads the *raw* tables — each looked-up row's pending
+        # decay is applied inline during the gather (closed form, O(1)), so
+        # the tower forward/backward has no data-dependence on the dedup
+        # above: the "data" all-gathers overlap the forward compute.
         loss, g_emb, g_lin, g_dense = shard_lib.batch_forward_backward(
-            cfg, plans, fwd, dense_params, ids, feats, labels, n_data)
+            cfg, plans, embed_sh, dense_params, ids, feats, labels, n_data,
+            last_steps=ls_sh, step=t, factor=factor)
 
         # phase 2: row update on the touched slots. When overflow is
         # statically impossible (the default) the row gradient is
@@ -548,43 +587,56 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         # O(rows_per_shard) full-row materialization, which dominated the
         # hybrid's step time at production vocabs. Overflow-capable fields
         # keep the full-row grad/count assembly their dense fallback
-        # branch needs.
+        # branch needs. Every row-grad psum is issued before any row
+        # update runs, so the "data" reductions launch back-to-back and
+        # overlap the (collective-free) updates of earlier fields.
+        g_psum = {g: {} for g in embed_sh}
+        cnt_full = {}
+        with jax.named_scope("rowgrad_psum"):
+            for i in range(n_fields):
+                f = f"field_{i}"
+                plan = plans[f]
+                uloc, cnts, ovf = dedup[f]
+                cnt_full[f] = None
+                if ovf is not False:
+                    cnt_full[f] = (
+                        hybrid_lib.full_counts_from_gathered(*gathered[f],
+                                                             plan)
+                        if staged else
+                        jax.lax.psum(
+                            shard_lib.counts_partial(ids[:, i], plan),
+                            "data"))
+                for group, g_batch in (("fm", g_emb), ("lin", g_lin)):
+                    if group not in embed_sh:
+                        continue
+                    if ovf is False:
+                        g_psum[group][f] = (jax.lax.psum(
+                            hybrid_lib.rowgrad_slots(g_batch[:, i, :],
+                                                     ids[:, i], plan, uloc),
+                            "data"), None)
+                    else:
+                        g_psum[group][f] = (None, jax.lax.psum(
+                            shard_lib.rowgrad_partial(g_batch[:, i, :],
+                                                      ids[:, i], plan),
+                            "data"))
+
         new_w = {g: {} for g in embed_sh}
         new_m = {g: {} for g in embed_sh}
         new_v = {g: {} for g in embed_sh}
         new_ls = {g: {} for g in embed_sh}
-        for i in range(n_fields):
-            f = f"field_{i}"
-            plan = plans[f]
-            uloc, cnts, ovf = dedup[f]
-            cnt_full = None
-            if ovf is not False:
-                cnt_full = (
-                    hybrid_lib.full_counts_from_gathered(*gathered[f], plan)
-                    if staged else
-                    jax.lax.psum(shard_lib.counts_partial(ids[:, i], plan),
-                                 "data"))
-            for group, g_batch in (("fm", g_emb), ("lin", g_lin)):
-                if group not in embed_sh:
-                    continue
-                if ovf is False:
-                    g_slots = jax.lax.psum(
-                        hybrid_lib.rowgrad_slots(g_batch[:, i, :],
-                                                 ids[:, i], plan, uloc),
-                        "data")
-                    g_full = None
-                else:
-                    g_slots = None
-                    g_full = jax.lax.psum(
-                        shard_lib.rowgrad_partial(g_batch[:, i, :],
-                                                  ids[:, i], plan), "data")
-                (new_w[group][f], new_m[group][f], new_v[group][f],
-                 new_ls[group][f]) = hybrid_lib.update_phase(
-                    fwd[group][f], base_m[group][f], base_v[group][f],
-                    ls_sh[group][f], *rows_c[group][f], uloc, cnts, ovf,
-                    g_slots, g_full, cnt_full, t, use_kernel=use_kernel,
-                    interpret=interpret, **upd_kw)
-        return new_w, new_m, new_v, new_ls, g_dense, loss, n_overflow
+        with jax.named_scope("row_update"):
+            for i in range(n_fields):
+                f = f"field_{i}"
+                uloc, cnts, ovf = dedup[f]
+                for group in embed_sh:
+                    g_slots, g_full = g_psum[group][f]
+                    (new_w[group][f], new_m[group][f], new_v[group][f],
+                     new_ls[group][f]) = hybrid_lib.update_phase(
+                        embed_sh[group][f], m_sh[group][f], v_sh[group][f],
+                        ls_sh[group][f], uloc, cnts, ovf,
+                        g_slots, g_full, cnt_full[f], t,
+                        use_kernel=use_kernel, interpret=interpret, **upd_kw)
+        return new_w, new_m, new_v, new_ls, g_dense, loss, n_overflow, depth
 
     # check_rep=False: the lazy-decay catch-up is a while loop (traced trip
     # count) inside lax.cond, for which jax 0.4.x's shard_map replication
@@ -594,7 +646,7 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         local_step, mesh=mesh,
         in_specs=(EMB, EMB, EMB, LS, REP, REP,
                   P("data", None), P("data", None), P("data")),
-        out_specs=(EMB, EMB, EMB, LS, REP, REP, REP),
+        out_specs=(EMB, EMB, EMB, LS, REP, REP, REP, REP),
         check_rep=False,
     )
 
@@ -608,9 +660,9 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
         m_p = shard_lib.to_physical(state["m"], plans)
         v_p = shard_lib.to_physical(state["v"], plans)
         ls_p = shard_lib.to_physical(state["last_step"], plans)
-        new_w, new_m, new_v, new_ls, g_dense, loss, n_overflow = smapped(
-            w_p, m_p, v_p, ls_p, params["dense"], t,
-            ids, batch["dense"], batch["labels"])
+        new_w, new_m, new_v, new_ls, g_dense, loss, n_overflow, depth = (
+            smapped(w_p, m_p, v_p, ls_p, params["dense"], t,
+                    ids, batch["dense"], batch["labels"]))
         new_embed = shard_lib.to_logical(new_w, plans)
         d_updates, d_state = dense_tx.update(
             g_dense, state["dense"], params["dense"])
@@ -621,7 +673,8 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
                      "last_step": shard_lib.to_logical(new_ls, plans),
                      "dense": d_state}
         return {"embed": new_embed, "dense": new_dense}, new_state, {
-            "loss": loss, "overflow_shards": n_overflow}
+            "loss": loss, "overflow_shards": n_overflow,
+            "catchup_depth_max": depth}
 
     def step_eager(params, state, batch):
         # the host-side overflow warning lives only on the eager step: a

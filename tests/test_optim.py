@@ -101,8 +101,8 @@ def test_two_group_routes_counts_only_to_embed():
     }
     counts = {"t": jnp.array([0.0, 1.0, 1.0, 0.0])}
     u, st = tx.update(grads, st, params, counts=counts)
-    # rows 0/3 absent -> clipped to 0 -> only L2 drives the update; with
-    # L2 = 2e-4 and Adam normalization, |update| ~ emb_lr
+    # rows 0/3 absent -> their update is the pure coupled-L2 decay delta
+    # w*(1 - lr*l2) - w, bypassing Adam (moments hold for absent rows)
     assert u["embed"]["t"].shape == (4, 8)
     assert u["dense"]["w"].shape == (3, 3)
     # second step with donated-like reuse keeps working

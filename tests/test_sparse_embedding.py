@@ -205,9 +205,10 @@ def test_absent_id_lazy_decay_exact_after_k_skipped_steps():
     np.testing.assert_allclose(np.asarray(fv), np.asarray(dv), atol=1e-6)
 
 
-def test_lazy_catchup_replays_adam_momentum_at_zero_l2():
-    """Even with l2=0 the dense path keeps moving a once-touched row via
-    Adam momentum (g=0 but m, v decay); the catch-up must replay that too."""
+def test_lazy_path_exact_at_zero_l2():
+    """At l2=0 the absent-row decay factor is exactly 1.0 — a once-touched
+    row holds still (moments too) until its next gradient, so the lazy path
+    must match the dense oracle with zero pending work to collapse."""
     cfg_d = _cfg()
     cfg_s = dataclasses.replace(cfg_d, sparse=True)
     hp = _hp(l2=0.0)
