@@ -621,6 +621,186 @@ def train_engine_bench(
     return rows
 
 
+def _replay_requests(score, requests, n_clients: int):
+    """Replay a request log closed-loop and time every request.
+
+    ``n_clients`` threads each own a disjoint slice of the log and submit
+    their next request as soon as the previous one resolves — the standard
+    closed-loop load model, so concurrency (not an artificial arrival
+    process) is what fills the micro-batcher. ``n_clients=1`` degenerates to
+    the naive sequential path. Returns (per-request seconds, wall seconds).
+    """
+    import threading
+
+    lats = [None] * len(requests)
+    slices = [range(c, len(requests), n_clients) for c in range(n_clients)]
+
+    def client(idxs):
+        for i in idxs:
+            ids, dense = requests[i]
+            t0 = time.perf_counter()
+            s = score(ids, dense)
+            lats[i] = time.perf_counter() - t0
+            assert s.shape == (ids.shape[0],)
+
+    threads = [threading.Thread(target=client, args=(sl,)) for sl in slices]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return lats, time.perf_counter() - t0
+
+
+def serving_bench(
+    out_path: str = "BENCH_serving.json",
+    fast: bool = False,
+) -> list:
+    """Zipf request-log replay through the three serving paths, emitted to
+    ``BENCH_serving.json``.
+
+    The deepfm config of the shard benches (first-field vocab 200k, Zipf-1.2
+    ids — the same skew CowClip's id-frequency counts come from) served
+    three ways:
+
+    * ``naive``  — one dispatch of the deployed fixed-shape engine per
+      request, sequential: what serving without a batcher costs on a
+      one-compile engine, every request paying a full ``max_batch``-padded
+      forward. (The other conceivable baseline — compiling per request
+      size — is the retrace-per-size cliff ``make_eval_fn`` had; its p99
+      is compile time, not a serving number.)
+    * ``micro``  — ``serve.MicroBatcher`` in front of a ``ServingEngine``:
+      concurrent closed-loop clients coalesced into fixed-shape dispatches.
+    * ``hot``    — the same batcher in front of ``serve.HotEmbeddingCache``
+      (top-K rows device-resident, admission from the log's training-time
+      id frequencies).
+
+    Per path: p50/p99 request latency (ms), QPS, and for ``hot`` the cache
+    hit rate. Acceptance gate (tracked by scripts/bench_guard.py and the
+    tier-1 CI job): ``micro`` QPS >= 5x ``naive`` QPS.
+    """
+    import numpy as np
+
+    from repro.models import ctr as ctr_lib
+    from repro.serve import (HotEmbeddingCache, MicroBatcher, ServingEngine,
+                             id_frequencies)
+
+    vocab = 200_000
+    n_requests = 512 if fast else 2048
+    req_rows_max = 8
+    n_clients = 32
+    max_batch = 256
+    max_wait_ms = 1.0
+    cache_rows = 4096
+    # fast mode replays fewer requests per rep, so it takes more reps for
+    # the min-over-reps percentiles to converge on the contention-free tail
+    reps = 7 if fast else 3
+
+    # serving-sized deepfm: wide enough that the forward (what the batcher
+    # amortizes), not per-request python overhead, dominates a dispatch
+    cfg = ctr_lib.CTRConfig(
+        name="deepfm", vocab_sizes=(vocab, 10_000), n_dense=4,
+        emb_dim=32, mlp_dims=(256, 256, 256), emb_sigma=1e-2)
+    params = ctr_lib.init(jax.random.key(0), cfg)
+
+    rng = np.random.default_rng(7)
+    # "training" traffic: the hot cache's admission signal — same Zipf
+    # recipe, disjoint draw from the request log
+    train_ids, _, _ = _zipf_case_rows(rng, vocab, 65_536)
+    freqs = id_frequencies(train_ids, cfg.vocab_sizes)
+
+    # the request log: n_requests requests of 1..req_rows_max rows each
+    sizes = rng.integers(1, req_rows_max + 1, size=n_requests)
+    req_ids, req_dense, _ = _zipf_case_rows(rng, vocab, int(sizes.sum()))
+    requests, off = [], 0
+    for n in sizes:
+        requests.append((req_ids[off: off + n], req_dense[off: off + n]))
+        off += n
+
+    engine = ServingEngine(cfg, params, batch_size=max_batch)
+    cache = HotEmbeddingCache(cfg, params, freqs, capacity=cache_rows,
+                              batch_size=max_batch)
+
+    # hot path must score exactly what the engine scores (the tier-1 suite
+    # asserts this per placement; assert here too so the bench can't drift)
+    probe = requests[0]
+    assert np.abs(cache.score(*probe) - engine.score(*probe)).max() <= 1e-5
+
+    # reps are interleaved round-robin over the three paths, not clustered
+    # per path: a background-load spike on a shared runner then lands on
+    # the same rep of every path, and the per-metric best-over-reps below
+    # (max QPS, min p50/p99 — the repo's min-over-windows idiom, since
+    # contention only ever inflates a rep) recovers each path's clean
+    # window from the same time span, keeping cross-path ratios stable
+    paths, batchers = [], []
+    for name, score, clients in (
+            ("naive", engine.score, 1),
+            ("micro", engine.score, n_clients),
+            ("hot", cache.score, n_clients)):
+        if clients > 1:
+            mb = MicroBatcher(score, max_batch=max_batch,
+                              max_wait_ms=max_wait_ms)
+            batchers.append((name, mb))
+            score = mb.score
+        paths.append((name, score, clients))
+
+    best = {name: {"qps": 0.0, "wall": float("inf"),
+                   "p50": float("inf"), "p99": float("inf")}
+            for name, _, _ in paths}
+    for _ in range(reps):
+        for name, score, clients in paths:
+            lats, wall = _replay_requests(score, requests, clients)
+            ms = 1e3 * np.asarray(lats)
+            b = best[name]
+            b["qps"] = max(b["qps"], n_requests / wall)
+            b["wall"] = min(b["wall"], wall)
+            b["p50"] = min(b["p50"], float(np.percentile(ms, 50)))
+            b["p99"] = min(b["p99"], float(np.percentile(ms, 99)))
+
+    records, rows = [], []
+    for name, _, clients in paths:
+        b = best[name]
+        rec = {
+            "path": name,
+            "n_requests": n_requests,
+            "rows": int(sizes.sum()),
+            "clients": clients,
+            "p50_ms": b["p50"],
+            "p99_ms": b["p99"],
+            "qps": b["qps"],
+            "rows_per_sec": float(sizes.sum() / b["wall"]),
+        }
+        if name == "hot":
+            rec["cache_hit_rate"] = cache.hit_rate()
+            rec["cache_rows"] = cache.stats()["device_rows"]
+        records.append(rec)
+        rows.append(_csv(
+            f"serving/{name}", 1e3 * rec["p50_ms"],
+            f"qps={rec['qps']:.0f};p99_ms={rec['p99_ms']:.2f}"))
+        print(f"[serving_bench] {name}: p50 {rec['p50_ms']:.2f} ms, "
+              f"p99 {rec['p99_ms']:.2f} ms, {rec['qps']:.0f} qps")
+    for name, mb in batchers:
+        s = mb.stats()
+        rec = next(r for r in records if r["path"] == name)
+        rec["mean_fill_rows"] = s["mean_fill"]
+        rec["dispatches"] = s["dispatches"]
+        mb.close()
+
+    by = {r["path"]: r for r in records}
+    summary = {
+        "micro_over_naive_qps": by["micro"]["qps"] / by["naive"]["qps"],
+        "hot_over_naive_qps": by["hot"]["qps"] / by["naive"]["qps"],
+        "cache_hit_rate": by["hot"]["cache_hit_rate"],
+    }
+    with open(out_path, "w") as f:
+        json.dump({"vocab": vocab, "backend": jax.default_backend(),
+                   "max_batch": max_batch, "max_wait_ms": max_wait_ms,
+                   "n_clients": n_clients, "summary": summary,
+                   "records": records}, f, indent=2)
+    print(f"[serving_bench] wrote {out_path}; summary {summary}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -636,7 +816,17 @@ def main() -> None:
     ap.add_argument("--engine-bench", action="store_true",
                     help="run only the eager-vs-scan training-engine grid "
                          "(spawns 8 virtual host devices)")
+    ap.add_argument("--serve-bench", action="store_true",
+                    help="run only the serving request-replay grid "
+                         "(naive / micro-batched / hot-cache paths)")
     args = ap.parse_args()
+
+    if args.serve_bench:
+        rows = serving_bench(fast=args.fast)
+        print("\nname,us_per_call,derived")
+        for row in rows:
+            print(row)
+        return
 
     if args.shard_bench or args.hybrid_bench or args.engine_bench:
         # must precede the first jax backend touch in this process

@@ -1,0 +1,185 @@
+"""CTR serving demo: checkpoint -> micro-batched scoring loop -> latency
+printout.
+
+The inference half of the CowClip story: train fast, then actually serve the
+model. Trains a small DeepFM for a few steps (or loads a ``run_ctr
+--checkpoint`` file, which carries the hot-cache admission counts as
+``id_freq``), snapshots it through the placement's ``flush``/``export``
+hooks, and replays a Zipf request log three ways:
+
+* ``naive`` — one fixed-shape engine dispatch per request, sequential;
+* ``micro`` — concurrent clients coalesced by ``serve.MicroBatcher``;
+* ``hot``   — the same batcher over ``serve.HotEmbeddingCache`` (top-K
+  hottest rows device-resident, cold tail in host memory).
+
+  PYTHONPATH=src python examples/serve_ctr.py
+  PYTHONPATH=src python examples/serve_ctr.py --requests 200 --clients 8
+  PYTHONPATH=src python examples/serve_ctr.py --checkpoint ckpt.npz
+  PYTHONPATH=src python examples/serve_ctr.py --compute-dtype bfloat16
+
+See docs/serving.md for the engine/batcher/cache contracts; the LM serving
+demo (greedy decode with KV caches) is ``examples/serve_decode.py``.
+"""
+
+import argparse
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import scale_hyperparams
+from repro.data.synthetic import make_ctr_dataset
+from repro.embed import store_for
+from repro.embed.store import serving_snapshot
+from repro.models import ctr
+from repro.serve import (HotEmbeddingCache, MicroBatcher, ServingEngine,
+                         id_frequencies)
+from repro.train import checkpoint, train_ctr
+
+
+def _cfg_from_checkpoint(path):
+    """Recover the deepfm geometry from a ``run_ctr --checkpoint`` file.
+
+    Vocab sizes and ``emb_dim`` come from the fm table shapes, the tower
+    widths from the mlp weights, and ``n_dense`` from the mlp input width
+    minus the flattened embeddings — so any ``run_ctr`` deepfm checkpoint
+    serves without re-stating its ``--emb-dim``/``--mlp-dim`` flags here.
+    """
+    z = np.load(path)
+    fm = sorted((k for k in z.files if k.startswith("params/embed/fm/")),
+                key=lambda k: int(k.rsplit("_", 1)[1]))
+    vocabs = tuple(int(z[k].shape[0]) for k in fm)
+    emb_dim = int(z[fm[0]].shape[1])
+    ws = sorted((k for k in z.files if k.startswith("params/dense/mlp/w")),
+                key=lambda k: int(k.rsplit("w", 1)[1]))
+    mlp_dims = tuple(int(z[k].shape[1]) for k in ws)
+    n_dense = int(z[ws[0]].shape[0]) - len(vocabs) * emb_dim
+    return ctr.CTRConfig(name="deepfm", vocab_sizes=vocabs, n_dense=n_dense,
+                         emb_dim=emb_dim, mlp_dims=mlp_dims, emb_sigma=1e-2)
+
+
+def get_model(args):
+    """(cfg, canonical params, id_freq) from a checkpoint or a short run.
+
+    The checkpoint path expects a ``run_ctr --checkpoint`` deepfm file; its
+    geometry is read back from the saved array shapes, so ``--emb-dim`` /
+    ``--mlp-dim`` here only shape the train-from-scratch fallback.
+    """
+    if args.checkpoint:
+        cfg = _cfg_from_checkpoint(args.checkpoint)
+        template = {"params": ctr.init(jax.random.key(0), cfg),
+                    # int32: counts restore through jnp, which is x64-off
+                    "id_freq": {f"field_{i}": np.zeros(v, np.int32)
+                                for i, v in enumerate(cfg.vocab_sizes)}}
+        state = checkpoint.restore(args.checkpoint, template)
+        print(f"[serve] restored {args.checkpoint}: deepfm "
+              f"vocabs {cfg.vocab_sizes}, emb_dim {cfg.emb_dim}, "
+              f"mlp {cfg.mlp_dims}")
+        return cfg, state["params"], state["id_freq"]
+
+    vocabs = (30_000, 80_000, 5_000, 1_000, 200)
+    cfg = ctr.CTRConfig(
+        name="deepfm", vocab_sizes=vocabs, n_dense=4, emb_dim=args.emb_dim,
+        mlp_dims=(args.mlp_dim,) * 3, emb_sigma=1e-2)
+
+    ds = make_ctr_dataset(args.samples, vocabs, n_dense=4, zipf_a=1.1,
+                          seed=0)
+    tr, te = ds.split(0.9)
+    hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-5,
+                           base_batch=256, batch_size=256)
+    bundle = store_for(cfg, path="sparse").make_bundle(cfg, hp)
+    print(f"[serve] no checkpoint: training {args.steps} sparse-placement "
+          f"steps on {len(tr)} synthetic rows")
+    res = train_ctr(cfg, None, tr, te, batch_size=256, epochs=1,
+                    step_bundle=bundle, max_steps=args.steps,
+                    eval_every_epoch=False)
+    # flush pending lazy decay + undo placement layout -> dense snapshot
+    params = serving_snapshot(bundle, res.params, res.opt_state)
+    return cfg, params, id_frequencies(tr.ids, cfg.vocab_sizes)
+
+
+def replay(name, score, requests, n_clients):
+    lats = [None] * len(requests)
+
+    def client(idxs):
+        for i in idxs:
+            ids, dense = requests[i]
+            t0 = time.perf_counter()
+            score(ids, dense)
+            lats[i] = time.perf_counter() - t0
+
+    threads = [threading.Thread(
+        target=client, args=(range(c, len(requests), n_clients),))
+        for c in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    ms = 1e3 * np.asarray(lats)
+    print(f"[serve] {name:6s} p50 {np.percentile(ms, 50):7.2f} ms   "
+          f"p99 {np.percentile(ms, 99):7.2f} ms   "
+          f"{len(requests) / wall:7.0f} qps   ({n_clients} clients)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--checkpoint", default=None,
+                    help="run_ctr --checkpoint file; trains briefly if unset")
+    ap.add_argument("--samples", type=int, default=20_000)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--emb-dim", type=int, default=16)
+    ap.add_argument("--mlp-dim", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=600)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-wait-ms", type=float, default=1.0)
+    ap.add_argument("--cache-rows", type=int, default=1024,
+                    help="hot rows kept device-resident per field")
+    ap.add_argument("--compute-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    args = ap.parse_args()
+
+    cfg, params, freqs = get_model(args)
+
+    engine = ServingEngine(cfg, params, batch_size=args.max_batch,
+                           compute_dtype=args.compute_dtype)
+    cache = HotEmbeddingCache(cfg, params, freqs, capacity=args.cache_rows,
+                              batch_size=args.max_batch,
+                              compute_dtype=args.compute_dtype)
+
+    rng = np.random.default_rng(1)
+    sizes = rng.integers(1, 9, size=args.requests)
+    n_rows = int(sizes.sum())
+    ids = np.stack([np.minimum(rng.zipf(1.2, n_rows) - 1, v - 1)
+                    for v in cfg.vocab_sizes], axis=1).astype(np.int32)
+    dense = rng.normal(size=(n_rows, cfg.n_dense)).astype(np.float32)
+    requests, off = [], 0
+    for n in sizes:
+        requests.append((ids[off: off + n], dense[off: off + n]))
+        off += n
+
+    # exactness: the cache must score exactly what the engine scores
+    err = np.abs(cache.score(ids[:64], dense[:64])
+                 - engine.score(ids[:64], dense[:64])).max()
+    print(f"[serve] {n_rows} rows in {args.requests} requests; hot-cache vs "
+          f"engine max |err| {err:.2e}")
+
+    replay("naive", engine.score, requests, 1)
+    with MicroBatcher(engine.score, max_batch=args.max_batch,
+                      max_wait_ms=args.max_wait_ms) as mb:
+        replay("micro", mb.score, requests, args.clients)
+        fill = mb.stats()["mean_fill"]
+    with MicroBatcher(cache.score, max_batch=args.max_batch,
+                      max_wait_ms=args.max_wait_ms) as mb:
+        replay("hot", mb.score, requests, args.clients)
+    print(f"[serve] micro mean fill {fill:.0f} rows/dispatch; hot-cache hit "
+          f"rate {cache.hit_rate():.1%} "
+          f"({cache.stats()['device_rows']} device rows of "
+          f"{cache.stats()['host_rows']}); engine compiles: {engine.n_traces}")
+
+
+if __name__ == "__main__":
+    main()

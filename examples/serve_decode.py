@@ -1,6 +1,12 @@
-"""Serving example: batched greedy decoding with per-family KV/recurrent
-caches — full attention, sliding-window ring buffers (gemma3 family), and
-O(1) SSM state (rwkv6/zamba2 families) behind one ``serve_step`` API.
+"""Serving example (LM path): batched greedy decoding with per-family
+KV/recurrent caches — full attention, sliding-window ring buffers (gemma3
+family), and O(1) SSM state (rwkv6/zamba2 families) behind one
+``serve_step`` API.
+
+This is the *language-model* serving demo. The CTR serving path — the
+CowClip paper's model family, via ``repro.serve`` (fixed-shape engine,
+request micro-batcher, hot-id embedding cache) — is
+``examples/serve_ctr.py``; see docs/serving.md.
 
   PYTHONPATH=src python examples/serve_decode.py [--arch gemma3-12b]
 """

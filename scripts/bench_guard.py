@@ -1,15 +1,21 @@
 #!/usr/bin/env python
-"""Bench-regression guard for the hybrid embedding step.
+"""Bench-regression guard: hybrid embedding step + serving replay.
 
-Compares a freshly generated BENCH_sharded_sparse.json against the
-committed baseline and fails (exit 1) if the hybrid's relative step time
-regressed: for every vocab present in both files, the fresh
-``sharded / sharded_sparse`` step-time ratio must not drop below the
-baseline ratio by more than ``--tolerance`` (relative). A ratio above 1.0
-means the hybrid step is faster than the dense-per-shard step; the guard
-protects the gap already won, not an absolute number — absolute step times
-on shared CI runners are too noisy to gate on, but the two placements run
-back-to-back on the same machine so their ratio is stable.
+Compares a freshly generated bench JSON against the committed baseline and
+fails (exit 1) on a relative regression beyond ``--tolerance``. Two file
+kinds, auto-detected from the records:
+
+* **hybrid** (``BENCH_sharded_sparse.json``): for every vocab present in
+  both files, the fresh ``sharded / sharded_sparse`` step-time ratio must
+  not drop below the baseline ratio by more than the tolerance.
+* **serving** (``BENCH_serving.json``, records keyed by ``path``): the
+  fresh ``micro/naive`` and ``hot/naive`` QPS ratios must not drop, and the
+  corresponding p99 latency ratios must not rise, by more than the
+  tolerance — plus the hard acceptance floor ``micro >= 5x naive`` QPS.
+
+Both guards compare *ratios of paths measured back-to-back in the same
+process*, never absolute times: contention on a shared CI runner inflates
+every path together, so the ratio is stable where absolutes are noise.
 
 Usage:
     python scripts/bench_guard.py BASELINE.json FRESH.json [--tolerance 0.15]
@@ -19,10 +25,16 @@ import argparse
 import json
 import sys
 
+# acceptance gate from the serving bench: micro-batched QPS >= 5x naive
+MICRO_QPS_FLOOR = 5.0
 
-def ratios(path):
+
+def _load(path):
     with open(path) as f:
-        d = json.load(f)
+        return json.load(f)
+
+
+def hybrid_ratios(d):
     by_vocab = {}
     for r in d.get("records", []):
         by_vocab.setdefault(r["vocab"], {})[r["placement"]] = r["step_us"]
@@ -33,34 +45,95 @@ def ratios(path):
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("baseline")
-    ap.add_argument("fresh")
-    ap.add_argument("--tolerance", type=float, default=0.15,
-                    help="allowed relative drop in the sharded/"
-                         "sharded_sparse ratio before failing")
-    args = ap.parse_args()
+def serving_ratios(d):
+    """(higher-is-better, lower-is-better) metric dicts from a serving file."""
+    by = {r["path"]: r for r in d.get("records", [])}
+    if not {"naive", "micro", "hot"} <= set(by):
+        return {}, {}
+    naive = by["naive"]
+    hi = {f"{p}_over_naive_qps": by[p]["qps"] / max(naive["qps"], 1e-9)
+          for p in ("micro", "hot")}
+    lo = {f"{p}_p99_over_naive": by[p]["p99_ms"] / max(naive["p99_ms"], 1e-9)
+          for p in ("micro", "hot")}
+    return hi, lo
 
-    base = ratios(args.baseline)
-    fresh = ratios(args.fresh)
-    if not fresh:
-        print("bench_guard: fresh file has no comparable records", file=sys.stderr)
+
+def _is_serving(d):
+    return any("path" in r for r in d.get("records", []))
+
+
+def guard_hybrid(base, fresh, tol):
+    base_r, fresh_r = hybrid_ratios(base), hybrid_ratios(fresh)
+    if not fresh_r:
+        print("bench_guard: fresh file has no comparable records",
+              file=sys.stderr)
         return 1
-
     failed = False
-    for vocab, fr in sorted(fresh.items()):
-        br = base.get(vocab)
+    for vocab, fr in sorted(fresh_r.items()):
+        br = base_r.get(vocab)
         if br is None:
             print(f"vocab {vocab}: fresh ratio {fr:.3f}x (no baseline record)")
             continue
-        floor = br * (1.0 - args.tolerance)
+        floor = br * (1.0 - tol)
         status = "ok" if fr >= floor else "REGRESSED"
         print(f"vocab {vocab}: sharded/sharded_sparse ratio "
               f"{fr:.3f}x vs baseline {br:.3f}x (floor {floor:.3f}x) {status}")
         if fr < floor:
             failed = True
     return 1 if failed else 0
+
+
+def guard_serving(base, fresh, tol):
+    base_hi, base_lo = serving_ratios(base)
+    fresh_hi, fresh_lo = serving_ratios(fresh)
+    if not fresh_hi:
+        print("bench_guard: fresh serving file has no comparable records",
+              file=sys.stderr)
+        return 1
+    failed = False
+    for name, fr in sorted(fresh_hi.items()):       # QPS ratios: must not drop
+        br = base_hi.get(name)
+        if br is None:
+            print(f"{name}: fresh {fr:.2f}x (no baseline)")
+            continue
+        floor = br * (1.0 - tol)
+        status = "ok" if fr >= floor else "REGRESSED"
+        print(f"{name}: {fr:.2f}x vs baseline {br:.2f}x "
+              f"(floor {floor:.2f}x) {status}")
+        if fr < floor:
+            failed = True
+    for name, fr in sorted(fresh_lo.items()):       # p99 ratios: must not rise
+        br = base_lo.get(name)
+        if br is None:
+            print(f"{name}: fresh {fr:.2f}x (no baseline)")
+            continue
+        ceil = br * (1.0 + tol)
+        status = "ok" if fr <= ceil else "REGRESSED"
+        print(f"{name}: {fr:.2f}x vs baseline {br:.2f}x "
+              f"(ceiling {ceil:.2f}x) {status}")
+        if fr > ceil:
+            failed = True
+    fr = fresh_hi["micro_over_naive_qps"]
+    if fr < MICRO_QPS_FLOOR:
+        print(f"micro_over_naive_qps: {fr:.2f}x below the hard "
+              f"{MICRO_QPS_FLOOR:.0f}x acceptance floor REGRESSED")
+        failed = True
+    return 1 if failed else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative movement of a guarded ratio "
+                         "before failing")
+    args = ap.parse_args()
+
+    base, fresh = _load(args.baseline), _load(args.fresh)
+    if _is_serving(fresh):
+        return guard_serving(base, fresh, args.tolerance)
+    return guard_hybrid(base, fresh, args.tolerance)
 
 
 if __name__ == "__main__":

@@ -1,44 +1,61 @@
 #!/usr/bin/env bash
-# Smoke-run every documented CLI example so docs/cli.md cannot rot.
+# Smoke-run every documented CLI example so the docs cannot rot.
 #
-# Extracts each command from the plain ```bash fences of docs/cli.md
-# (blocks marked ```bash no-smoke are skipped — external data / real
-# hardware), joins backslash continuations, and runs it on synthetic data
-# with small overrides appended (argparse: the last occurrence of a flag
-# wins, so the documented flags still parse exactly as written):
+# Extracts each command from the plain ```bash fences (blocks marked
+# ```bash no-smoke are skipped — external data / real hardware), joins
+# backslash continuations, and runs it on synthetic data with small
+# overrides appended (argparse: the last occurrence of a flag wins, so the
+# documented flags still parse exactly as written):
 #
-#   --steps 2 --samples 4096 --epochs 1 --batch 256
+#   docs/cli.md      (repro.launch.train):  --steps 2 --samples 4096
+#                                           --epochs 1 --batch 256
+#   docs/serving.md  (examples/serve_ctr):  --steps 3 --samples 4096
+#                                           --requests 60 --clients 4
 #
 # Wired into CI (.github/workflows/ci.yml). Run locally the same way:
 #   bash scripts/docs_check.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-DOC=docs/cli.md
-SMOKE="--steps 2 --samples 4096 --epochs 1 --batch 256"
-
-for page in docs/architecture.md docs/cowclip.md docs/cli.md docs/benchmarks.md; do
+for page in docs/architecture.md docs/cowclip.md docs/cli.md \
+            docs/benchmarks.md docs/serving.md; do
   [ -s "$page" ] || { echo "[docs-check] missing page: $page" >&2; exit 1; }
 done
 
-# commands: inside ```bash fences only, comments stripped, continuations joined
-mapfile -t cmds < <(
-  awk '/^```bash$/{inb=1;next} /^```/{inb=0} inb' "$DOC" \
+# extract_cmds DOC PATTERN: commands inside plain ```bash fences matching
+# PATTERN, comments stripped, continuations joined
+extract_cmds() {
+  awk '/^```bash$/{inb=1;next} /^```/{inb=0} inb' "$1" \
   | sed -e 's/[[:space:]]*#.*$//' \
   | awk '{ if (sub(/\\$/,"")) { buf = buf $0 " " } else if (length(buf $0)) { print buf $0; buf = "" } }' \
-  | grep 'repro\.launch\.train'
-)
+  | grep "$2"
+}
 
-if [ "${#cmds[@]}" -eq 0 ]; then
-  echo "[docs-check] no runnable commands found in $DOC" >&2
+run_cmds() {
+  local label=$1 smoke=$2; shift 2
+  local i=0 n=$#
+  for cmd in "$@"; do
+    i=$((i + 1))
+    echo "[docs-check] $label ($i/$n) $cmd $smoke"
+    eval "$cmd $smoke"
+  done
+}
+
+mapfile -t train_cmds < <(extract_cmds docs/cli.md 'repro\.launch\.train')
+if [ "${#train_cmds[@]}" -eq 0 ]; then
+  echo "[docs-check] no runnable commands found in docs/cli.md" >&2
   exit 1
 fi
 
-echo "[docs-check] ${#cmds[@]} documented commands"
-i=0
-for cmd in "${cmds[@]}"; do
-  i=$((i + 1))
-  echo "[docs-check] ($i/${#cmds[@]}) $cmd $SMOKE"
-  eval "$cmd $SMOKE"
-done
+mapfile -t serve_cmds < <(extract_cmds docs/serving.md 'examples/serve_ctr\.py')
+if [ "${#serve_cmds[@]}" -eq 0 ]; then
+  echo "[docs-check] no runnable commands found in docs/serving.md" >&2
+  exit 1
+fi
+
+echo "[docs-check] ${#train_cmds[@]} train + ${#serve_cmds[@]} serving commands"
+run_cmds "cli.md" "--steps 2 --samples 4096 --epochs 1 --batch 256" \
+  "${train_cmds[@]}"
+run_cmds "serving.md" "--steps 3 --samples 4096 --requests 60 --clients 4" \
+  "${serve_cmds[@]}"
 echo "[docs-check] all documented commands ran"

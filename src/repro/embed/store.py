@@ -170,6 +170,39 @@ class EmbeddingStore:
                                scan_step=step.scan_step)
 
 
+def serving_snapshot(bundle: TrainStepBundle, params, state):
+    """Canonical dense params for serving, from any placement's live state.
+
+    ``flush`` first (settles the lazy-decay placements' pending coupled-L2
+    decay via the closed-form catch-up; identity elsewhere), then ``export``
+    (inverts ``prepare``'s layout — strips sharded pad rows back to
+    ``[vocab, dim]``; identity elsewhere). The result is the placement-
+    independent ``{"embed", "dense"}`` tree ``serve.ServingEngine`` scores
+    with — so a snapshot taken from any of the four placements serves
+    identically.
+    """
+    params, _ = bundle.flush(params, state)
+    return bundle.export(params)
+
+
+def max_pending_depth(state) -> int:
+    """Deepest pending lazy-decay debt in an optimizer state, in steps.
+
+    ``max(step - last_step)`` over every embedding row — 0 right after a
+    ``flush`` (or for eager placements, whose state has no ``last_step``).
+    Serving tests use it to prove a snapshot really exercised the catch-up
+    path (depth > 0 before, exact scores after).
+    """
+    if not isinstance(state, dict) or "last_step" not in state:
+        return 0
+    step = jax.numpy.asarray(state["step"], jax.numpy.int32)
+    depths = [
+        int(jax.numpy.max(step - ls.astype(jax.numpy.int32)))
+        for ls in jax.tree.leaves(state["last_step"])
+    ]
+    return max([0] + depths)
+
+
 def resolve_path(cfg, path: Optional[str] = None) -> str:
     """Resolution order: explicit path > cfg.placement > cfg.sparse knob."""
     if path is None:

@@ -130,16 +130,22 @@ def run_ctr(args) -> None:
           f"-> AUC {100*res.final_eval['auc']:.2f} "
           f"logloss {res.final_eval['logloss']:.4f}")
     if args.checkpoint:
+        from ..serve import id_frequencies
+
         # export strips placement-specific layout (the sharded path's pad
         # rows) so the checkpoint restores against a fresh ctr.init template
-        # under any placement
+        # under any placement; id_freq is the serving hot-cache admission
+        # signal (training-time per-field id counts — what CowClip's per-step
+        # ``cnt`` sums to over the data)
         checkpoint.save(args.checkpoint, {
             "params": bundle.export(res.params),
             "final_eval": {k: jnp.asarray(v)
                            for k, v in res.final_eval.items()
                            if k in ("auc", "logloss")},
+            "id_freq": id_frequencies(tr.ids, cfg.vocab_sizes),
         })
-        print(f"[train] final params checkpointed to {args.checkpoint}")
+        print(f"[train] final params checkpointed to {args.checkpoint} "
+              "(with id_freq for serving)")
 
 
 def run_lm(args) -> None:

@@ -1,0 +1,30 @@
+"""Low-latency CTR serving: compiled fixed-shape scoring, request
+micro-batching, and a hot-id embedding cache.
+
+The training side of this repo is compiled and placement-aware; this package
+is the inference side — the "heavy traffic from millions of users" half of
+the ROADMAP north star. Three layers, composable but independently usable:
+
+* ``engine``   — ``ServingEngine``: a fixed-shape, one-compile forward over a
+                 flush-applied dense snapshot of any placement's checkpoint.
+* ``batcher``  — ``MicroBatcher``: coalesces concurrent score requests into
+                 one fixed-shape dispatch under a max-wait deadline.
+* ``hotcache`` — ``HotEmbeddingCache``: device-resident top-K rows (admitted
+                 by training-time id frequency) over a host-memory full
+                 table, bit-exact with the uncached forward.
+
+See docs/serving.md for the dataflow and contracts.
+"""
+
+from .batcher import MicroBatcher
+from .engine import ServingEngine, make_logits_fn, padded_score_loop
+from .hotcache import HotEmbeddingCache, id_frequencies
+
+__all__ = [
+    "HotEmbeddingCache",
+    "MicroBatcher",
+    "ServingEngine",
+    "id_frequencies",
+    "make_logits_fn",
+    "padded_score_loop",
+]

@@ -1,0 +1,205 @@
+"""Compiled fixed-shape CTR scoring: the serving half of the training loop.
+
+Two ideas, both lifted from the training side and hardened for inference:
+
+* **One compile per engine.** Every dispatch scores exactly
+  ``[batch_size]`` rows — requests smaller than that are zero-padded and the
+  pad scores discarded host-side, requests larger are cut into fixed slices
+  (the ``make_eval_fn`` trick from ``train/loop.py``, now shared here via
+  ``padded_score_loop``). Variable request sizes therefore never retrace:
+  p99 latency has no compilation cliffs in it.
+
+* **Placement-independent snapshots.** An engine scores a *canonical dense*
+  ``{"embed", "dense"}`` params tree. Any training placement produces one
+  through its bundle's ``flush`` (collapses pending lazy L2 decay — the
+  closed-form ``decay_factor`` catch-up, O(1) in pending depth) followed by
+  ``export`` (strips sharded pad rows back to ``[vocab, dim]``); that pair
+  is ``embed.store.serving_snapshot``. A raw sparse-state checkpoint without
+  a live bundle can use ``collapse_pending_decay`` directly.
+
+``compute_dtype="bfloat16"`` scores through the same mixed-precision cast
+points as training (``models/ctr.py``): activations and dense weights narrow,
+logits return f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import optim as optim_lib
+from ..data import prefetch as prefetch_lib
+from ..models import ctr
+
+
+class TracedFn:
+    """A jitted function that counts its traces.
+
+    ``n_traces`` is the number of times jax traced the body — the serving
+    engine's "one compile per shape" contract is asserted against it in
+    tests, and serving stats report it so a retrace storm is visible.
+    """
+
+    __slots__ = ("_jitted", "_counter")
+
+    def __init__(self, body):
+        counter = {"n": 0}
+
+        def counted(*args):
+            counter["n"] += 1
+            return body(*args)
+
+        self._jitted = jax.jit(counted)
+        self._counter = counter
+
+    def __call__(self, *args):
+        return self._jitted(*args)
+
+    @property
+    def n_traces(self) -> int:
+        return self._counter["n"]
+
+
+def make_logits_fn(cfg: ctr.CTRConfig) -> TracedFn:
+    """The jitted scoring forward ``(params, ids, dense) -> logits [B]``.
+
+    Shared by ``ServingEngine`` and ``train.loop.make_eval_fn`` so both sides
+    score through literally the same compiled computation.
+    """
+    return TracedFn(lambda params, ids, dense: ctr.apply(params, cfg, ids,
+                                                         dense))
+
+
+def _pad_rows(arr: np.ndarray, n: int) -> np.ndarray:
+    """Zero-pad a host array along axis 0 up to ``n`` rows."""
+    if arr.shape[0] == n:
+        return arr
+    pad = np.zeros((n - arr.shape[0],) + arr.shape[1:], arr.dtype)
+    return np.concatenate([arr, pad])
+
+
+def padded_score_loop(
+    logits_fn,
+    params,
+    ids: np.ndarray,
+    dense: np.ndarray,
+    batch_size: int,
+    *,
+    overlap: bool = True,
+) -> np.ndarray:
+    """Score ``n`` rows through fixed ``[batch_size]`` zero-padded slices.
+
+    Every dispatch — including a short tail and inputs smaller than
+    ``batch_size`` — runs the same ``[batch_size]`` shape, so ``logits_fn``
+    compiles exactly once per engine regardless of how many distinct request
+    sizes pass through. Pad scores are discarded host-side. With ``overlap``
+    (multi-slice inputs only) host slicing runs on the background prefetch
+    worker so the slice *i+1* copy overlaps the slice *i* forward.
+    """
+    ids = np.asarray(ids)
+    dense = np.asarray(dense)
+    n = ids.shape[0]
+    if n <= batch_size:
+        s = logits_fn(params, _pad_rows(ids, batch_size),
+                      _pad_rows(dense, batch_size))
+        return np.asarray(s)[:n].astype(np.float32, copy=True)
+
+    def host_slices():
+        for start in range(0, n, batch_size):
+            end = min(start + batch_size, n)
+            yield {"ids": _pad_rows(ids[start:end], batch_size),
+                   "dense": _pad_rows(dense[start:end], batch_size)}
+
+    slices = (prefetch_lib.prefetch(host_slices()) if overlap
+              else host_slices())
+    scores = np.empty(n, np.float32)
+    start = 0
+    for b in slices:
+        s = logits_fn(params, b["ids"], b["dense"])
+        end = min(start + batch_size, n)
+        scores[start:end] = np.asarray(s)[: end - start]
+        start = end
+    return scores
+
+
+def collapse_pending_decay(embed: dict, last_step: dict, step, *,
+                           lr: float, l2: float) -> dict:
+    """Apply pending lazy coupled-L2 decay to raw sparse-placement tables.
+
+    The closed form ``w *= (1 - lr*l2)**k`` with ``k = step - last_step[row]``
+    (``core.optim.decay_factor`` rounding, O(1) in depth) — what a bundle's
+    ``flush`` does, for the case where only the checkpoint arrays survive
+    and no live bundle exists to flush through. ``embed``/``last_step`` are
+    the usual ``{group: {field: leaf}}`` trees; rows already caught up
+    (``k == 0``) multiply by exactly 1.0.
+    """
+    f = jnp.float32(optim_lib.decay_factor(lr, l2))
+
+    def catch_up(w, ls):
+        k = (jnp.asarray(step, jnp.int32) - ls.astype(jnp.int32))
+        k = jnp.maximum(k, 0).astype(jnp.float32)
+        scale = jnp.where(k > 0, f ** k, jnp.float32(1.0))
+        return (w.astype(jnp.float32) * scale[:, None]).astype(w.dtype)
+
+    return jax.tree.map(catch_up, embed, last_step)
+
+
+class ServingEngine:
+    """Fixed-shape compiled scoring over a dense, flush-applied snapshot.
+
+    Construct from canonical dense params (``__init__``) or straight from a
+    live training bundle + state (``from_training`` — flushes pending lazy
+    decay and undoes the placement layout via ``embed.store
+    .serving_snapshot``, so dense/sparse/sharded/sharded_sparse checkpoints
+    all serve identically).
+
+    ``score`` is thread-safe in the sense that concurrent calls serialize on
+    jax dispatch; for real concurrency put a ``MicroBatcher`` in front —
+    ``engine.score`` is exactly the shape its ``score_fn`` expects.
+    """
+
+    def __init__(self, cfg: ctr.CTRConfig, params: dict, *,
+                 batch_size: int = 256,
+                 compute_dtype: Optional[str] = None):
+        if compute_dtype is not None:
+            cfg = dataclasses.replace(cfg, compute_dtype=compute_dtype)
+        self.cfg = cfg
+        self.batch_size = int(batch_size)
+        # one placement decision: the snapshot lives wherever jax puts
+        # committed arrays (device 0); serving never shards, so no dispatch
+        # ever pays a collective
+        self.params = jax.device_put(params)
+        self._logits_fn = make_logits_fn(cfg)
+        self._rows = 0
+        self._dispatches = 0
+
+    @classmethod
+    def from_training(cls, bundle, params, state, cfg: ctr.CTRConfig,
+                      **kwargs) -> "ServingEngine":
+        """Snapshot a live (or restored) training bundle and serve it."""
+        from ..embed.store import serving_snapshot
+
+        return cls(cfg, serving_snapshot(bundle, params, state), **kwargs)
+
+    def score(self, ids, dense) -> np.ndarray:
+        """Score [n, F] ids + [n, Dd] dense feats -> [n] f32 logits."""
+        ids = np.atleast_2d(np.asarray(ids, np.int32))
+        dense = np.atleast_2d(np.asarray(dense, np.float32))
+        self._rows += ids.shape[0]
+        self._dispatches += -(-ids.shape[0] // self.batch_size)
+        return padded_score_loop(self._logits_fn, self.params, ids, dense,
+                                 self.batch_size)
+
+    @property
+    def n_traces(self) -> int:
+        """Compiles so far — stays at 1 after the first dispatch."""
+        return self._logits_fn.n_traces
+
+    def stats(self) -> dict:
+        return {"rows": self._rows, "dispatches": self._dispatches,
+                "n_traces": self.n_traces, "batch_size": self.batch_size,
+                "compute_dtype": self.cfg.compute_dtype}

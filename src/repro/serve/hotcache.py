@@ -1,0 +1,200 @@
+"""Hot-id embedding cache: device-resident top-K rows over a host full table.
+
+A production CTR vocabulary (10^8 rows and beyond) does not fit in one
+accelerator's HBM, and the sharded training placements answer that with a
+gather + collective per lookup — the wrong trade for serving, where every
+request pays it. The serving answer (Baidu's terabyte-scale hot/cold split,
+arXiv:2201.05500) exploits the same Zipf skew CowClip is built on: a tiny
+fraction of ids covers almost all traffic, so a small **hot working set**
+of rows pinned on the device serves the bulk of lookups, and the cold tail
+lives in host memory and is fetched only on miss.
+
+Admission is *frequency-clairvoyant*: training already counts every id's
+batch occurrences for CowClip (Alg. 1's ``cnt``), and the sum of those
+per-step counts over an epoch is exactly the dataset id frequency —
+``id_frequencies`` computes it in one host pass, ``launch/train.py``
+exports it alongside the checkpoint, and the cache admits each field's
+top-``capacity`` ids by that count. No online eviction: CTR id popularity
+drifts slowly relative to checkpoint cadence, so the admission set refreshes
+with the model snapshot.
+
+Exactness contract: hot rows are *copies* of the same table rows the
+uncached engine reads, assembled into the identical
+``ctr._forward_from_emb`` combiner — cached and uncached scores agree to
+float equality (asserted <= 1e-5 for every placement's exported checkpoint
+in tests/test_serve_ctr.py).
+
+On this container the "device" is CPU-backed, so the win is architectural
+rather than wall-clock: what the dispatch avoids is keeping the full
+``[vocab, dim]`` tables device-resident (only ``capacity`` rows per field
+are), and on a real chip the per-dispatch host work is the miss gather
+alone — O(misses), which Zipf traffic drives toward zero.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ctr
+from .engine import TracedFn, _pad_rows
+
+
+def id_frequencies(ids: np.ndarray,
+                   vocab_sizes: Sequence[int]) -> Dict[str, np.ndarray]:
+    """Per-field id occurrence counts over a training id matrix [N, F].
+
+    Equal to the sum over steps of the per-batch counts CowClip computes
+    (``models.embedding.field_counts``), up to any ``drop_remainder`` tail —
+    the admission signal the hot cache keys on. Returns
+    ``{"field_i": int64 [vocab_i]}``.
+    """
+    return {
+        f"field_{i}": np.bincount(
+            np.asarray(ids[:, i]).ravel(), minlength=v)[:v].astype(np.int64)
+        for i, v in enumerate(vocab_sizes)
+    }
+
+
+class HotEmbeddingCache:
+    """Two-tier embedding storage behind the engine's scoring contract.
+
+    Per field the top-``capacity`` ids by training frequency live as device
+    arrays (the fm table's ``[K, dim]`` rows, plus the 1-dim LR stream's
+    rows when the model has one); the full tables stay as host NumPy. A
+    dispatch resolves each (row, field) lookup against the hot set
+    (``slot_of``: id -> hot slot, -1 on miss), gathers only the miss rows
+    from the host tables, and a single fixed-shape compiled forward selects
+    hit rows from the device-resident hot tables and runs the standard
+    combiner. ``score`` has the engine signature, so it drops into a
+    ``MicroBatcher`` unchanged.
+    """
+
+    def __init__(self, cfg: ctr.CTRConfig, params: dict,
+                 freqs: Dict[str, np.ndarray], *, capacity: int = 4096,
+                 batch_size: int = 256,
+                 compute_dtype: Optional[str] = None):
+        if compute_dtype is not None:
+            cfg = dataclasses.replace(cfg, compute_dtype=compute_dtype)
+        self.cfg = cfg
+        self.batch_size = int(batch_size)
+        self.has_lin = "lin" in params["embed"]
+
+        # host tier: the full tables, never device_put
+        self._host_fm = [np.asarray(params["embed"]["fm"][f"field_{i}"])
+                         for i in range(cfg.n_fields)]
+        self._host_lin = ([np.asarray(params["embed"]["lin"][f"field_{i}"])
+                           for i in range(cfg.n_fields)]
+                          if self.has_lin else None)
+
+        # device tier: top-capacity rows per field by training frequency
+        self._slot_of = []
+        hot_fm, hot_lin = [], []
+        self.hot_rows = []
+        for i, v in enumerate(cfg.vocab_sizes):
+            freq = np.asarray(freqs[f"field_{i}"])
+            if freq.shape[0] != v:
+                raise ValueError(
+                    f"field_{i}: freq length {freq.shape[0]} != vocab {v}")
+            k = min(int(capacity), v)
+            hot_ids = np.argsort(-freq, kind="stable")[:k]
+            slot = np.full(v, -1, np.int32)
+            slot[hot_ids] = np.arange(k, dtype=np.int32)
+            self._slot_of.append(slot)
+            self.hot_rows.append(k)
+            hot_fm.append(jax.device_put(
+                jnp.asarray(self._host_fm[i][hot_ids])))
+            if self.has_lin:
+                hot_lin.append(jax.device_put(
+                    jnp.asarray(self._host_lin[i][hot_ids])))
+        self._hot_fm = tuple(hot_fm)
+        self._hot_lin = tuple(hot_lin) if self.has_lin else None
+        self._dense_params = jax.device_put(params["dense"])
+
+        self._fwd = TracedFn(self._fwd_body)
+        self._lookups = 0
+        self._hits = 0
+
+    # ---- compiled side ----------------------------------------------------
+
+    def _fwd_body(self, dense_params, hot_fm, hot_lin, slots, hit,
+                  miss_fm, miss_lin, feats):
+        """Fixed-shape forward: per field select the hot row (device gather)
+        or the uploaded miss row, then the standard combiner. ``slots`` are
+        clipped to 0 on miss — the garbage gather is masked by ``hit``."""
+        cfg = self.cfg
+        cols = [jnp.where(hit[:, i, None], hot_fm[i][slots[:, i]],
+                          miss_fm[:, i])
+                for i in range(cfg.n_fields)]
+        emb = jnp.stack(cols, axis=1)
+        lin_emb = None
+        if hot_lin is not None:
+            lcols = [jnp.where(hit[:, i, None], hot_lin[i][slots[:, i]],
+                               miss_lin[:, i])
+                     for i in range(cfg.n_fields)]
+            lin_emb = jnp.stack(lcols, axis=1)
+        return ctr._forward_from_emb(dense_params, cfg, emb, lin_emb, feats)
+
+    # ---- host side --------------------------------------------------------
+
+    def _resolve(self, ids: np.ndarray):
+        """Split a padded [B, F] id block into hot slots and miss rows."""
+        b, n_fields = ids.shape
+        slots = np.empty((b, n_fields), np.int32)
+        for i in range(n_fields):
+            slots[:, i] = self._slot_of[i][ids[:, i]]
+        hit = slots >= 0
+        miss_fm = np.zeros((b, n_fields, self.cfg.emb_dim), np.float32)
+        miss_lin = (np.zeros((b, n_fields, 1), np.float32)
+                    if self.has_lin else None)
+        for i in range(n_fields):
+            mrows = ~hit[:, i]
+            if mrows.any():
+                cold = ids[mrows, i]
+                miss_fm[mrows, i] = self._host_fm[i][cold]
+                if self.has_lin:
+                    miss_lin[mrows, i] = self._host_lin[i][cold]
+        return np.maximum(slots, 0), hit, miss_fm, miss_lin
+
+    def _score_block(self, ids: np.ndarray, dense: np.ndarray,
+                     n_real: int) -> np.ndarray:
+        slots, hit, miss_fm, miss_lin = self._resolve(ids)
+        # stats over real rows only — pad rows alias id 0 and would skew
+        self._lookups += n_real * self.cfg.n_fields
+        self._hits += int(hit[:n_real].sum())
+        s = self._fwd(self._dense_params, self._hot_fm, self._hot_lin,
+                      slots, hit, miss_fm, miss_lin, dense)
+        return np.asarray(s)[:n_real]
+
+    def score(self, ids, dense) -> np.ndarray:
+        """Engine-contract scoring: [n, F] ids + [n, Dd] feats -> [n] f32."""
+        ids = np.atleast_2d(np.asarray(ids, np.int32))
+        dense = np.atleast_2d(np.asarray(dense, np.float32))
+        n = ids.shape[0]
+        bs = self.batch_size
+        out = np.empty(n, np.float32)
+        for start in range(0, max(n, 1), bs):
+            end = min(start + bs, n)
+            out[start:end] = self._score_block(
+                _pad_rows(ids[start:end], bs),
+                _pad_rows(dense[start:end], bs), end - start)
+        return out
+
+    @property
+    def n_traces(self) -> int:
+        return self._fwd.n_traces
+
+    def hit_rate(self) -> float:
+        """Fraction of (row, field) lookups served by the device hot set."""
+        return self._hits / max(self._lookups, 1)
+
+    def stats(self) -> dict:
+        return {"lookups": self._lookups, "hits": self._hits,
+                "hit_rate": self.hit_rate(), "hot_rows": list(self.hot_rows),
+                "n_traces": self.n_traces,
+                "device_rows": int(sum(self.hot_rows)),
+                "host_rows": int(sum(t.shape[0] for t in self._host_fm))}

@@ -17,7 +17,6 @@ from ..core import GradientTransformation, apply_updates
 from ..core.builders import jit_step
 
 logger = logging.getLogger(__name__)
-from ..data import prefetch as prefetch_lib
 from ..data.synthetic import CTRDataset, iterate_batches
 from ..models import ctr
 from ..models import embedding as embedding_lib
@@ -694,50 +693,36 @@ def make_sharded_sparse_train_step(cfg: ctr.CTRConfig, hp, mesh, *,
 def make_eval_fn(cfg: ctr.CTRConfig):
     """Batched, prefetch-overlapped evaluation.
 
-    Scoring runs in fixed ``[batch_size]`` slices — one compiled executable
-    regardless of test-set size (the tail slice is zero-padded and its pad
-    scores discarded host-side), bounding device memory at one batch of
-    activations instead of the whole test set. Host slicing runs on the
-    background prefetch worker so the batch *i+1* copy overlaps the batch
-    *i* forward. The returned metrics include ``eval_rows_per_sec``
-    (scored rows / wall-clock over the scoring loop).
-    """
+    Scoring runs through the serving engine's ``padded_score_loop``: every
+    dispatch is a fixed ``[batch_size]`` slice (inputs smaller than a batch
+    are zero-padded *up*, never down), so ``logits_fn`` compiles once per
+    ``batch_size`` regardless of how many distinct test-set sizes pass
+    through — previously ``bs = min(batch_size, n)`` retraced for every
+    small ``n``. Pad scores are discarded host-side; device memory is
+    bounded at one batch of activations; host slicing overlaps the forward
+    via the background prefetch worker. The returned metrics include
+    ``eval_rows_per_sec`` (scored rows / wall-clock over the scoring loop).
 
-    @jax.jit
-    def logits_fn(params, ids, dense):
-        return ctr.apply(params, cfg, ids, dense)
+    The returned ``evaluate`` exposes ``evaluate.logits_fn`` (a
+    ``serve.engine.TracedFn``) so tests can assert the single-compile
+    contract via ``n_traces``.
+    """
+    from ..serve import engine as serve_engine
+
+    logits_fn = serve_engine.make_logits_fn(cfg)
 
     def evaluate(params, ds: CTRDataset, batch_size: int = 8192) -> dict:
         n = len(ds)
-        bs = min(batch_size, n)
-
-        def host_slices():
-            for start in range(0, n, bs):
-                end = min(start + bs, n)
-                ids, dense = ds.ids[start:end], ds.dense[start:end]
-                if end - start < bs:
-                    pad = bs - (end - start)
-                    ids = np.concatenate(
-                        [ids, np.zeros((pad,) + ids.shape[1:], ids.dtype)])
-                    dense = np.concatenate(
-                        [dense, np.zeros((pad,) + dense.shape[1:],
-                                         dense.dtype)])
-                yield {"ids": ids, "dense": dense}
-
-        scores = np.empty(n, np.float32)
-        start = 0
         t0 = time.perf_counter()
-        for b in prefetch_lib.prefetch(host_slices()):
-            s = logits_fn(params, b["ids"], b["dense"])
-            end = min(start + bs, n)
-            scores[start:end] = np.asarray(s)[: end - start]
-            start = end
+        scores = serve_engine.padded_score_loop(
+            logits_fn, params, ds.ids, ds.dense, batch_size)
         seconds = time.perf_counter() - t0
         labels = ds.labels
         ll = float(np.mean(np.logaddexp(0.0, scores) - labels * scores))
         return {"auc": metrics.auc_numpy(scores, labels), "logloss": ll,
                 "eval_rows_per_sec": n / max(seconds, 1e-9)}
 
+    evaluate.logits_fn = logits_fn
     return evaluate
 
 

@@ -1,0 +1,416 @@
+"""CTR serving path: fixed-shape engine (one compile per engine, exact
+scores), micro-batcher contract (coalescing, deadline, tail round-trip,
+error propagation), hot-id cache exactness per placement, and the
+``make_eval_fn`` single-compile fix."""
+
+import dataclasses
+import json
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scale_hyperparams
+from repro.data.synthetic import CTRDataset, make_ctr_dataset, iterate_batches
+from repro.embed import store_for
+from repro.embed.store import max_pending_depth, serving_snapshot
+from repro.models import ctr
+from repro.serve import (HotEmbeddingCache, MicroBatcher, ServingEngine,
+                         id_frequencies)
+from repro.serve.engine import collapse_pending_decay, padded_score_loop
+from repro.train.loop import make_eval_fn
+
+VOCABS = (60, 13, 5)
+
+
+def _cfg(**kw):
+    return ctr.CTRConfig(name="deepfm", vocab_sizes=VOCABS, n_dense=3,
+                         emb_dim=8, mlp_dims=(16, 16), emb_sigma=1e-2, **kw)
+
+
+def _rows(n, seed=0, vocabs=VOCABS, n_dense=3):
+    rng = np.random.default_rng(seed)
+    ids = np.stack([rng.integers(0, v, n) for v in vocabs], 1).astype(np.int32)
+    dense = rng.normal(size=(n, n_dense)).astype(np.float32)
+    return ids, dense
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    return cfg, ctr.init(jax.random.key(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# engine: exactness + one compile
+# ---------------------------------------------------------------------------
+
+
+def test_engine_scores_match_apply_across_sizes_one_compile(model):
+    cfg, params = model
+    ids, dense = _rows(300)
+    ref = np.asarray(ctr.apply(params, cfg, ids, dense))
+    eng = ServingEngine(cfg, params, batch_size=64)
+    for n in (1, 3, 64, 65, 200, 300):
+        np.testing.assert_allclose(eng.score(ids[:n], dense[:n]), ref[:n],
+                                   atol=1e-5)
+    # every size above — pad-up, exact, and tail slices — hit ONE executable
+    assert eng.n_traces == 1
+    s = eng.stats()
+    assert s["rows"] == 1 + 3 + 64 + 65 + 200 + 300
+
+
+def test_engine_scores_single_row_1d_input(model):
+    cfg, params = model
+    ids, dense = _rows(1)
+    eng = ServingEngine(cfg, params, batch_size=16)
+    one = eng.score(ids[0], dense[0])        # 1-D convenience form
+    np.testing.assert_allclose(
+        one, np.asarray(ctr.apply(params, cfg, ids, dense)), atol=1e-5)
+
+
+def test_padded_score_loop_tail_roundtrip(model):
+    cfg, params = model
+    ids, dense = _rows(130)
+    ref = np.asarray(ctr.apply(params, cfg, ids, dense))
+    logits_fn = jax.jit(lambda p, i, d: ctr.apply(p, cfg, i, d))
+    for bs in (130, 64, 7):                  # exact, tail, tiny slices
+        got = padded_score_loop(logits_fn, params, ids, dense, bs)
+        np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_engine_bf16_compute_dtype(model):
+    cfg, params = model
+    ids, dense = _rows(64)
+    ref = np.asarray(ctr.apply(params, cfg, ids, dense))
+    eng = ServingEngine(cfg, params, batch_size=64,
+                        compute_dtype="bfloat16")
+    s = eng.score(ids, dense)
+    assert s.dtype == np.float32 and np.isfinite(s).all()
+    # bf16 scoring tracks f32 at bf16 resolution, not 1e-5
+    assert np.abs(s - ref).max() < 0.1
+    assert eng.cfg.compute_dtype == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# eval fix: no retrace per test-set size
+# ---------------------------------------------------------------------------
+
+
+def test_make_eval_fn_single_compile_across_test_sizes(model):
+    cfg, params = model
+    evaluate = make_eval_fn(cfg)
+    for n in (10, 33, 64, 100):              # all smaller than batch_size
+        ds = CTRDataset(*_rows(n), (np.zeros(n) < 0.5).astype(np.float32),
+                        VOCABS)
+        m = evaluate(params, ds, batch_size=128)
+        assert np.isfinite(m["logloss"]) and 0.0 <= m["auc"] <= 1.0
+    # pre-fix this was 4 traces (bs = min(batch_size, n) per size)
+    assert evaluate.logits_fn.n_traces == 1
+
+
+def test_make_eval_fn_metrics_unchanged_by_padding(model):
+    cfg, params = model
+    n = 90
+    ids, dense = _rows(n, seed=3)
+    labels = (np.random.default_rng(3).random(n) < 0.3).astype(np.float32)
+    ds = CTRDataset(ids, dense, labels, VOCABS)
+    m_pad = make_eval_fn(cfg)(params, ds, batch_size=128)   # one padded slice
+    m_exact = make_eval_fn(cfg)(params, ds, batch_size=45)  # two exact slices
+    assert m_pad["auc"] == pytest.approx(m_exact["auc"], abs=1e-6)
+    assert m_pad["logloss"] == pytest.approx(m_exact["logloss"], abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_roundtrip_matches_reference(model):
+    cfg, params = model
+    ids, dense = _rows(120)
+    ref = np.asarray(ctr.apply(params, cfg, ids, dense))
+    eng = ServingEngine(cfg, params, batch_size=32)
+    with MicroBatcher(eng.score, max_batch=32, max_wait_ms=1.0) as mb:
+        futs = [(i, mb.submit(ids[i:i + 5], dense[i:i + 5]))
+                for i in range(0, 120, 5)]
+        for i, f in futs:
+            np.testing.assert_allclose(f.result(timeout=10), ref[i:i + 5],
+                                       atol=1e-5)
+
+
+def test_batcher_coalesces_under_concurrency(model):
+    cfg, params = model
+    ids, dense = _rows(256)
+    eng = ServingEngine(cfg, params, batch_size=64)
+    eng.score(ids[:1], dense[:1])            # warm the compile
+    with MicroBatcher(eng.score, max_batch=64, max_wait_ms=20.0) as mb:
+        barrier = threading.Barrier(16)
+
+        def client(k):
+            barrier.wait()
+            mb.score(ids[4 * k: 4 * k + 4], dense[4 * k: 4 * k + 4])
+
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        s = mb.stats()
+    assert s["requests"] == 16
+    # 16 concurrent 4-row requests coalesce into far fewer dispatches
+    assert s["dispatches"] < 16
+    assert s["rows"] == 64
+    assert s["mean_fill"] > 4
+
+
+def test_batcher_deadline_flushes_partial_batch(model):
+    cfg, params = model
+    ids, dense = _rows(2)
+    eng = ServingEngine(cfg, params, batch_size=64)
+    eng.score(ids, dense)                    # warm: exclude compile from wait
+    with MicroBatcher(eng.score, max_batch=64, max_wait_ms=5.0) as mb:
+        t0 = time.perf_counter()
+        mb.score(ids, dense)                 # alone: only the deadline flushes
+        waited = time.perf_counter() - t0
+        s = mb.stats()
+    assert s["deadline_dispatches"] == 1 and s["full_dispatches"] == 0
+    assert waited < 2.0                      # deadline, not forever
+
+
+def test_batcher_never_splits_a_request(model):
+    cfg, params = model
+    ids, dense = _rows(30)
+    calls = []
+
+    def spy_score(i, d):
+        calls.append(i.shape[0])
+        return np.zeros(i.shape[0], np.float32)
+
+    with MicroBatcher(spy_score, max_batch=16, max_wait_ms=50.0) as mb:
+        # 10 + 9 > 16: the 9-row request must be held back whole
+        f1 = mb.submit(ids[:10], dense[:10])
+        f2 = mb.submit(ids[10:19], dense[10:19])
+        assert f1.result(timeout=10).shape == (10,)
+        assert f2.result(timeout=10).shape == (9,)
+    assert calls == [10, 9]
+
+
+def test_batcher_error_propagates_and_batcher_survives(model):
+    cfg, params = model
+    ids, dense = _rows(4)
+    eng = ServingEngine(cfg, params, batch_size=16)
+    boom = {"on": True}
+
+    def flaky(i, d):
+        if boom["on"]:
+            raise RuntimeError("scorer exploded")
+        return eng.score(i, d)
+
+    with MicroBatcher(flaky, max_batch=16, max_wait_ms=1.0) as mb:
+        f = mb.submit(ids, dense)
+        with pytest.raises(RuntimeError, match="scorer exploded"):
+            f.result(timeout=10)
+        boom["on"] = False                   # the batch failed, not the server
+        assert mb.score(ids, dense).shape == (4,)
+        assert mb.stats()["errors"] == 1
+
+
+def test_batcher_rejects_bad_requests(model):
+    cfg, params = model
+    ids, dense = _rows(40)
+    with MicroBatcher(lambda i, d: np.zeros(i.shape[0], np.float32),
+                      max_batch=16) as mb:
+        with pytest.raises(ValueError, match="exceeds max_batch"):
+            mb.submit(ids[:20], dense[:20])
+        with pytest.raises(ValueError, match="rows"):
+            mb.submit(ids[:3], dense[:4])
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(ids[:1], dense[:1])        # after close
+
+
+# ---------------------------------------------------------------------------
+# placement snapshots + hot cache exactness
+# ---------------------------------------------------------------------------
+
+PLACEMENTS = ("substrate", "fused", "sparse", "sharded", "sharded_sparse")
+
+
+def _trained_snapshot(path, n_steps=5):
+    """Train a few steps through ``path``'s bundle, return
+    (cfg, snapshot, pending-depth-before-flush, train ids)."""
+    cfg = _cfg(sparse=path == "sparse",
+               placement=path if path in ("sharded", "sharded_sparse")
+               else None)
+    ds = make_ctr_dataset(640, VOCABS, n_dense=3, zipf_a=1.2, seed=11)
+    mesh = None
+    if path in ("sharded", "sharded_sparse"):
+        n_model = 4 if jax.device_count() >= 4 else 1
+        mesh = jax.make_mesh((1, n_model), ("data", "model"))
+    hp = scale_hyperparams("cowclip", base_lr=1e-2, base_l2=1e-2,
+                           base_batch=64, batch_size=64)
+    bundle = store_for(cfg, path=path, mesh=mesh).make_bundle(cfg, hp)
+    params = bundle.prepare(ctr.init(jax.random.key(1), cfg))
+    state = bundle.init(params)
+    for i, b in enumerate(iterate_batches(ds, 64, seed=2)):
+        params, state, _ = bundle.step(params, state, b)
+        if i + 1 >= n_steps:
+            break
+    depth = max_pending_depth(state)
+    return cfg, serving_snapshot(bundle, params, state), depth, ds.ids
+
+
+@pytest.mark.parametrize("path", PLACEMENTS)
+def test_hot_cache_exact_for_every_placement(path):
+    """The acceptance gate: cached scores == uncached forward (<=1e-5) on the
+    placement's exported, flush-applied checkpoint. The lazy-decay
+    placements must arrive with non-zero pending depth so the snapshot
+    really exercised the closed-form catch-up."""
+    cfg, snap, depth, train_ids = _trained_snapshot(path)
+    if path in ("sparse", "sharded_sparse"):
+        assert depth > 0, "test must cover a non-trivial pending decay"
+    else:
+        assert depth == 0
+    ids, dense = _rows(150, seed=7)
+    ref = np.asarray(ctr.apply(snap, cfg, ids, dense))
+
+    eng = ServingEngine(cfg, snap, batch_size=64)
+    np.testing.assert_allclose(eng.score(ids, dense), ref, atol=1e-5)
+
+    freqs = id_frequencies(train_ids, cfg.vocab_sizes)
+    for capacity in (4, 10_000):             # partial and all-hot admission
+        cache = HotEmbeddingCache(cfg, snap, freqs, capacity=capacity,
+                                  batch_size=64)
+        np.testing.assert_allclose(cache.score(ids, dense), ref, atol=1e-5)
+        assert cache.n_traces == 1
+
+
+def test_serving_snapshot_collapses_pending_decay():
+    """The snapshot equals what the raw tables give after the closed-form
+    catch-up — i.e. flush really is ``w *= decay_factor**k`` per row."""
+    path = "sparse"
+    cfg = _cfg(sparse=True)
+    ds = make_ctr_dataset(640, VOCABS, n_dense=3, zipf_a=1.2, seed=11)
+    hp = scale_hyperparams("cowclip", base_lr=1e-2, base_l2=1e-2,
+                           base_batch=64, batch_size=64)
+    bundle = store_for(cfg, path=path).make_bundle(cfg, hp)
+    params = bundle.prepare(ctr.init(jax.random.key(1), cfg))
+    state = bundle.init(params)
+    for i, b in enumerate(iterate_batches(ds, 64, seed=2)):
+        params, state, _ = bundle.step(params, state, b)
+        if i + 1 >= 5:
+            break
+    assert max_pending_depth(state) > 0
+    snap = serving_snapshot(bundle, params, state)
+    manual = collapse_pending_decay(
+        params["embed"], state["last_step"], state["step"],
+        lr=hp.emb_lr, l2=hp.emb_l2)
+    for a, b_ in zip(jax.tree.leaves(snap["embed"]),
+                     jax.tree.leaves(manual)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_max_pending_depth_zero_for_eager_state():
+    cfg = _cfg()
+    hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-3,
+                           base_batch=64, batch_size=64)
+    bundle = store_for(cfg, path="substrate").make_bundle(cfg, hp)
+    params = bundle.prepare(ctr.init(jax.random.key(0), cfg))
+    assert max_pending_depth(bundle.init(params)) == 0
+
+
+# ---------------------------------------------------------------------------
+# hot cache mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_id_frequencies_are_bincounts():
+    ids, _ = _rows(500, seed=5)
+    freqs = id_frequencies(ids, VOCABS)
+    for i, v in enumerate(VOCABS):
+        assert freqs[f"field_{i}"].shape == (v,)
+        assert freqs[f"field_{i}"].sum() == 500
+        np.testing.assert_array_equal(
+            freqs[f"field_{i}"], np.bincount(ids[:, i], minlength=v))
+
+
+def test_hot_cache_hit_rate_tracks_admission(model):
+    cfg, params = model
+    # skewed traffic: id 0 dominates every field
+    rng = np.random.default_rng(9)
+    ids = np.stack([np.minimum(rng.zipf(1.5, 400) - 1, v - 1)
+                    for v in VOCABS], 1).astype(np.int32)
+    dense = rng.normal(size=(400, 3)).astype(np.float32)
+    freqs = id_frequencies(ids, VOCABS)
+
+    full = HotEmbeddingCache(cfg, params, freqs, capacity=10_000,
+                             batch_size=64)
+    full.score(ids, dense)
+    assert full.hit_rate() == 1.0            # whole vocab admitted
+
+    tiny = HotEmbeddingCache(cfg, params, freqs, capacity=2, batch_size=64)
+    tiny.score(ids, dense)
+    # Zipf head: 2 rows/field still catch most lookups, but not all
+    assert 0.5 < tiny.hit_rate() < 1.0
+    assert tiny.stats()["device_rows"] == 2 * len(VOCABS)
+
+
+def test_hot_cache_rejects_mismatched_freqs(model):
+    cfg, params = model
+    freqs = {f"field_{i}": np.ones(v + 1)    # wrong vocab length
+             for i, v in enumerate(VOCABS)}
+    with pytest.raises(ValueError, match="freq length"):
+        HotEmbeddingCache(cfg, params, freqs)
+
+
+def test_hot_cache_behind_batcher(model):
+    cfg, params = model
+    ids, dense = _rows(80)
+    ref = np.asarray(ctr.apply(params, cfg, ids, dense))
+    freqs = id_frequencies(ids, VOCABS)
+    cache = HotEmbeddingCache(cfg, params, freqs, capacity=8, batch_size=32)
+    with MicroBatcher(cache.score, max_batch=32, max_wait_ms=1.0) as mb:
+        futs = [mb.submit(ids[i:i + 4], dense[i:i + 4])
+                for i in range(0, 80, 4)]
+        for k, f in enumerate(futs):
+            np.testing.assert_allclose(f.result(timeout=10),
+                                       ref[4 * k: 4 * k + 4], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bench guard (serving mode)
+# ---------------------------------------------------------------------------
+
+
+def _serving_json(tmp_path, name, naive_qps, micro_qps, hot_qps,
+                  p99=(5.0, 8.0, 9.0)):
+    recs = [{"path": p, "qps": q, "p99_ms": pm} for p, q, pm in
+            zip(("naive", "micro", "hot"),
+                (naive_qps, micro_qps, hot_qps), p99)]
+    f = tmp_path / name
+    f.write_text(json.dumps({"records": recs}))
+    return str(f)
+
+
+def test_bench_guard_serving_pass_and_fail(tmp_path):
+    base = _serving_json(tmp_path, "base.json", 400, 4000, 2800)
+    ok = _serving_json(tmp_path, "ok.json", 380, 3900, 2700)
+    slow = _serving_json(tmp_path, "slow.json", 400, 2000, 2800)
+    import pathlib
+
+    guard = pathlib.Path(__file__).resolve().parent.parent / "scripts" \
+        / "bench_guard.py"
+    cmd = [sys.executable, str(guard)]
+    assert subprocess.run(cmd + [base, ok]).returncode == 0
+    # micro/naive qps ratio halved: must fail
+    assert subprocess.run(cmd + [base, slow]).returncode == 1
+    # micro below the hard 5x floor fails even when it matches baseline
+    floor_base = _serving_json(tmp_path, "fb.json", 400, 1600, 2800)
+    floor_fresh = _serving_json(tmp_path, "ff.json", 400, 1600, 2800)
+    assert subprocess.run(cmd + [floor_base, floor_fresh]).returncode == 1
