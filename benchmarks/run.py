@@ -801,6 +801,126 @@ def serving_bench(
     return rows
 
 
+def streaming_bench(
+    out_path: str = "BENCH_streaming.json",
+    fast: bool = False,
+) -> list:
+    """Streaming-regime train-step throughput and device-resident
+    embedding-state bytes for dense vs sparse vs hotcold, emitted to
+    ``BENCH_streaming.json``.
+
+    The online-training question is: what does it cost to keep a
+    production-vocab model (first field >= 1M ids) training on a device
+    whose memory cannot hold the full optimizer state? The deepfm/Zipf
+    case of the shard benches runs through three placements:
+
+    * ``dense``   — the substrate chain; full [vocab, dim] w/m/v resident
+      and streamed every step.
+    * ``sparse``  — unique-gather row update with lazy-decay catch-up;
+      update traffic is O(batch) but the full tables (plus last_step)
+      still live in device memory.
+    * ``hotcold`` — the streaming placement: only the ``hot_capacity``
+      frequency-ranked working set (w/m/v/ls) plus the O(vocab)
+      residency/frequency maps are device-resident; the tables are the
+      host tier.
+
+    ``device_bytes`` is analytic for dense/sparse (full w/m/v tables, +
+    last_step columns for sparse) and measured for hotcold
+    (``embed.hot_tier_bytes`` over the live state). On this CPU container
+    the "device" is host-backed, so the bytes column is the architectural
+    win; ``rows_per_sec`` (from the step time — chunk staging overlaps
+    training on the ``data.stream`` worker thread) shows what the
+    two-tier bookkeeping costs on top of sparse. Acceptance gate (tracked
+    by scripts/bench_guard.py and the tier-1 CI job): hotcold
+    ``device_bytes`` <= 0.25x dense and ``rows_per_sec`` >= 0.7x sparse.
+    """
+    from repro.core import build_train_step
+    from repro.embed import hot_tier_bytes
+    from repro.models import ctr as ctr_lib
+
+    vocab = 1_000_000
+    batch = 2048 if fast else 8192
+    hot_capacity = 4096
+    n, reps = 3, 3
+
+    cfg, hp, batch_data = _sharded_bench_case(vocab, batch)
+    params0 = ctr_lib.init(jax.random.key(0), cfg)
+    groups = [cfg.emb_dim, 1]    # deepfm: fm tables + 1-dim LR stream
+
+    def table_bytes(with_last_step):
+        """Full-table w/m/v f32 bytes (+ int32 last_step columns)."""
+        total = 0
+        for v in cfg.vocab_sizes:
+            total += sum(v * d * 4 * 3 for d in groups)
+            if with_last_step:
+                total += len(groups) * v * 4
+        return total
+
+    runs = {}
+    for placement, path in (("dense", "substrate"), ("sparse", "sparse"),
+                            ("hotcold", "hotcold")):
+        bundle = build_train_step(cfg, hp, path=path, warmup_steps=0,
+                                  hot_capacity=hot_capacity)
+        params = bundle.prepare(jax.tree.map(jnp.copy, params0))
+        state = bundle.init(params)
+        if placement == "hotcold":
+            device_bytes = hot_tier_bytes(state)
+        else:
+            device_bytes = table_bytes(with_last_step=placement == "sparse")
+        # compile + warm before any timed window
+        params, state, _ = bundle.step(params, state, dict(batch_data))
+        jax.block_until_ready(params)
+        runs[placement] = {"step": bundle.step, "params": params,
+                           "state": state, "device_bytes": device_bytes,
+                           "us": float("inf")}
+
+    # reps are interleaved round-robin over the three placements, not
+    # clustered per placement: a background-load spike on a shared runner
+    # then lands on the same rep of every placement, and min-over-reps
+    # (contention only ever inflates a window) recovers each placement's
+    # clean window from the same time span, keeping the cross-placement
+    # ratios the guard gates on stable
+    for _ in range(reps):
+        for placement, r in runs.items():
+            params, state = r["params"], r["state"]
+            t0 = time.perf_counter()
+            for _ in range(n):
+                params, state, _ = r["step"](params, state, dict(batch_data))
+            jax.block_until_ready(params)
+            r["us"] = min(r["us"], 1e6 * (time.perf_counter() - t0) / n)
+            r["params"], r["state"] = params, state
+
+    records, rows = [], []
+    for placement, r in runs.items():
+        rec = {"placement": placement, "vocab": vocab, "batch": batch,
+               "step_us": r["us"],
+               "rows_per_sec": batch * 1e6 / max(r["us"], 1e-9),
+               "device_bytes": r["device_bytes"]}
+        records.append(rec)
+        rows.append(_csv(
+            f"streaming/{placement}", r["us"],
+            f"rows_per_sec={rec['rows_per_sec']:.0f};"
+            f"device_bytes={rec['device_bytes']}"))
+        print(f"[streaming_bench] {placement}: {r['us']:.0f} us/step, "
+              f"{rec['rows_per_sec']:.0f} rows/s, "
+              f"{rec['device_bytes'] / 1e6:.1f} MB device-resident")
+
+    by = {r["placement"]: r for r in records}
+    summary = {
+        "hotcold_over_sparse_rows_per_sec":
+            by["hotcold"]["rows_per_sec"] / by["sparse"]["rows_per_sec"],
+        "hotcold_over_dense_device_bytes":
+            by["hotcold"]["device_bytes"] / by["dense"]["device_bytes"],
+    }
+    with open(out_path, "w") as f:
+        json.dump({"stream": True, "vocab": vocab, "batch": batch,
+                   "hot_capacity": hot_capacity, "emb_dim": cfg.emb_dim,
+                   "backend": jax.default_backend(), "summary": summary,
+                   "records": records}, f, indent=2)
+    print(f"[streaming_bench] wrote {out_path}; summary {summary}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -819,7 +939,18 @@ def main() -> None:
     ap.add_argument("--serve-bench", action="store_true",
                     help="run only the serving request-replay grid "
                          "(naive / micro-batched / hot-cache paths)")
+    ap.add_argument("--stream-bench", action="store_true",
+                    help="run only the streaming-placement grid "
+                         "(dense / sparse / hotcold rows-per-sec and "
+                         "device-resident bytes at vocab 1M)")
     args = ap.parse_args()
+
+    if args.stream_bench:
+        rows = streaming_bench(fast=args.fast)
+        print("\nname,us_per_call,derived")
+        for row in rows:
+            print(row)
+        return
 
     if args.serve_bench:
         rows = serving_bench(fast=args.fast)

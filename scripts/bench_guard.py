@@ -1,8 +1,8 @@
 #!/usr/bin/env python
-"""Bench-regression guard: hybrid embedding step + serving replay.
+"""Bench-regression guard: hybrid embedding step, serving replay, streaming.
 
 Compares a freshly generated bench JSON against the committed baseline and
-fails (exit 1) on a relative regression beyond ``--tolerance``. Two file
+fails (exit 1) on a relative regression beyond ``--tolerance``. Three file
 kinds, auto-detected from the records:
 
 * **hybrid** (``BENCH_sharded_sparse.json``): for every vocab present in
@@ -12,6 +12,11 @@ kinds, auto-detected from the records:
   fresh ``micro/naive`` and ``hot/naive`` QPS ratios must not drop, and the
   corresponding p99 latency ratios must not rise, by more than the
   tolerance — plus the hard acceptance floor ``micro >= 5x naive`` QPS.
+* **streaming** (``BENCH_streaming.json``, top-level ``"stream": true``):
+  the fresh ``hotcold/sparse`` rows-per-sec ratio must not drop below the
+  baseline ratio by more than the tolerance, plus two hard acceptance
+  floors on the fresh file alone: hotcold throughput >= 0.7x sparse and
+  hotcold device-resident bytes <= 0.25x dense.
 
 Both guards compare *ratios of paths measured back-to-back in the same
 process*, never absolute times: contention on a shared CI runner inflates
@@ -27,6 +32,12 @@ import sys
 
 # acceptance gate from the serving bench: micro-batched QPS >= 5x naive
 MICRO_QPS_FLOOR = 5.0
+
+# acceptance gates from the streaming bench (ISSUE 8): the hot/cold cache
+# must stay within 30% of sparse throughput while holding <= 25% of the
+# dense placement's device-resident bytes
+STREAM_ROWS_FLOOR = 0.7
+STREAM_BYTES_CEIL = 0.25
 
 
 def _load(path):
@@ -60,6 +71,55 @@ def serving_ratios(d):
 
 def _is_serving(d):
     return any("path" in r for r in d.get("records", []))
+
+
+def _is_streaming(d):
+    return bool(d.get("stream")) or any(
+        "rows_per_sec" in r and "placement" in r
+        for r in d.get("records", []))
+
+
+def streaming_ratios(d):
+    by = {r["placement"]: r for r in d.get("records", [])}
+    if not {"dense", "sparse", "hotcold"} <= set(by):
+        return {}
+    return {
+        "hotcold_over_sparse_rows_per_sec":
+            by["hotcold"]["rows_per_sec"] / max(by["sparse"]["rows_per_sec"],
+                                                1e-9),
+        "hotcold_over_dense_device_bytes":
+            by["hotcold"]["device_bytes"] / max(by["dense"]["device_bytes"],
+                                                1e-9),
+    }
+
+
+def guard_streaming(base, fresh, tol):
+    base_r, fresh_r = streaming_ratios(base), streaming_ratios(fresh)
+    if not fresh_r:
+        print("bench_guard: fresh streaming file has no comparable records",
+              file=sys.stderr)
+        return 1
+    failed = False
+    fr = fresh_r["hotcold_over_sparse_rows_per_sec"]
+    br = base_r.get("hotcold_over_sparse_rows_per_sec")
+    if br is not None:
+        floor = br * (1.0 - tol)
+        status = "ok" if fr >= floor else "REGRESSED"
+        print(f"hotcold/sparse rows_per_sec: {fr:.3f}x vs baseline "
+              f"{br:.3f}x (floor {floor:.3f}x) {status}")
+        if fr < floor:
+            failed = True
+    if fr < STREAM_ROWS_FLOOR:
+        print(f"hotcold/sparse rows_per_sec: {fr:.3f}x below the hard "
+              f"{STREAM_ROWS_FLOOR:.2f}x acceptance floor REGRESSED")
+        failed = True
+    fb = fresh_r["hotcold_over_dense_device_bytes"]
+    status = "ok" if fb <= STREAM_BYTES_CEIL else "REGRESSED"
+    print(f"hotcold/dense device_bytes: {fb:.3f}x "
+          f"(hard ceiling {STREAM_BYTES_CEIL:.2f}x) {status}")
+    if fb > STREAM_BYTES_CEIL:
+        failed = True
+    return 1 if failed else 0
 
 
 def guard_hybrid(base, fresh, tol):
@@ -131,6 +191,8 @@ def main():
     args = ap.parse_args()
 
     base, fresh = _load(args.baseline), _load(args.fresh)
+    if _is_streaming(fresh):
+        return guard_streaming(base, fresh, args.tolerance)
     if _is_serving(fresh):
         return guard_serving(base, fresh, args.tolerance)
     return guard_hybrid(base, fresh, args.tolerance)

@@ -7,10 +7,13 @@
 # overrides appended (argparse: the last occurrence of a flag wins, so the
 # documented flags still parse exactly as written):
 #
-#   docs/cli.md      (repro.launch.train):  --steps 2 --samples 4096
+#   docs/cli.md       (repro.launch.train): --steps 2 --samples 4096
 #                                           --epochs 1 --batch 256
-#   docs/serving.md  (examples/serve_ctr):  --steps 3 --samples 4096
+#   docs/serving.md   (examples/serve_ctr): --steps 3 --samples 4096
 #                                           --requests 60 --clients 4
+#   docs/streaming.md (repro.launch.train): --steps 2 --samples 4096
+#                                           --batch 256 --scan-steps 2
+#                                           --hot-capacity 64
 #
 # Wired into CI (.github/workflows/ci.yml). Run locally the same way:
 #   bash scripts/docs_check.sh
@@ -18,7 +21,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 for page in docs/architecture.md docs/cowclip.md docs/cli.md \
-            docs/benchmarks.md docs/serving.md; do
+            docs/benchmarks.md docs/serving.md docs/streaming.md; do
   [ -s "$page" ] || { echo "[docs-check] missing page: $page" >&2; exit 1; }
 done
 
@@ -53,9 +56,19 @@ if [ "${#serve_cmds[@]}" -eq 0 ]; then
   exit 1
 fi
 
-echo "[docs-check] ${#train_cmds[@]} train + ${#serve_cmds[@]} serving commands"
+mapfile -t stream_cmds < <(extract_cmds docs/streaming.md 'repro\.launch\.train')
+if [ "${#stream_cmds[@]}" -eq 0 ]; then
+  echo "[docs-check] no runnable commands found in docs/streaming.md" >&2
+  exit 1
+fi
+
+echo "[docs-check] ${#train_cmds[@]} train + ${#serve_cmds[@]} serving" \
+  "+ ${#stream_cmds[@]} streaming commands"
 run_cmds "cli.md" "--steps 2 --samples 4096 --epochs 1 --batch 256" \
   "${train_cmds[@]}"
 run_cmds "serving.md" "--steps 3 --samples 4096 --requests 60 --clients 4" \
   "${serve_cmds[@]}"
+run_cmds "streaming.md" \
+  "--steps 2 --samples 4096 --batch 256 --scan-steps 2 --hot-capacity 64" \
+  "${stream_cmds[@]}"
 echo "[docs-check] all documented commands ran"

@@ -205,7 +205,8 @@ class TrainStepBundle(NamedTuple):
     scan_step: Optional[Callable] = None
 
 
-TRAIN_PATHS = ("substrate", "fused", "sparse", "sharded", "sharded_sparse")
+TRAIN_PATHS = ("substrate", "fused", "sparse", "sharded", "sharded_sparse",
+               "hotcold")
 
 
 def build_train_step(
@@ -224,8 +225,9 @@ def build_train_step(
     use_kernel: Optional[bool] = None,
     mesh=None,
     partition: str = "div",
+    hot_capacity: int = 4096,
 ) -> TrainStepBundle:
-    """Route a CTR train step through one of the five update paths, all
+    """Route a CTR train step through one of the six update paths, all
     served by the ``repro.embed.EmbeddingStore`` placements:
 
       substrate      : composable GradientTransformation chain (the oracle);
@@ -241,6 +243,10 @@ def build_train_step(
       sharded_sparse : the hybrid — row-sharded tables with a per-shard
                        unique-id (lazy-decay) update, so memory is
                        O(vocab/n_model) and update traffic O(batch) at once
+      hotcold        : two-tier streaming placement — a fixed-capacity
+                       (``hot_capacity`` rows/field) frequency-ranked hot
+                       working set over the full cold table, bit-identical
+                       math to "sparse" via the lazy-decay catch-up
 
     ``path=None`` honors the config knobs: ``cfg.placement`` if set, else
     ``cfg.sparse`` selects "sparse", otherwise "substrate".
@@ -251,7 +257,8 @@ def build_train_step(
     """
     from ..embed.store import store_for  # deferred: embed imports core
 
-    store = store_for(cfg, path=path, mesh=mesh, partition=partition)
+    store = store_for(cfg, path=path, mesh=mesh, partition=partition,
+                      hot_capacity=hot_capacity)
     return store.make_bundle(
         cfg, hp, clip_kind=clip_kind, r=r, zeta=zeta, clip_t=clip_t,
         warmup_steps=warmup_steps, b1=b1, b2=b2, eps=eps,

@@ -1,0 +1,282 @@
+"""Bounded host-side streaming source for online CTR training.
+
+The epoch path trains over a static in-memory array; this module is the
+"data keeps arriving" half of the ROADMAP north star (the continuous-
+training regime of "On the Factory Floor"): an unbounded sequence of
+*events* — small ``{"ids", "dense", "labels"}`` host arrays of any length,
+from a generator, a growing file, or a replayed log — is re-batched into
+exact ``batch_size`` batches, stacked into the same ``[k, batch, ...]``
+chunks ``prefetch.chunk_epoch`` emits, and fed through a bounded worker
+queue so the stacking overlaps training. ``train_ctr(mode="stream")``
+consumes these chunks with either engine; there is no epoch, only a step
+budget (``max_steps`` / the CLI's ``--steps``).
+
+Shutdown and failure semantics mirror ``data.prefetch.prefetch``: the
+worker is a daemon thread behind a bounded queue, closing the consumer
+stops the worker promptly (0.1s put timeouts against a stop event), and a
+worker exception re-raises in the consumer. Leftover rows smaller than a
+batch at end-of-stream are dropped with the same one-time tail note the
+epoch path uses (``synthetic.note_dropped_remainder`` — once per process,
+because a stream re-opens sources repeatedly).
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from typing import Callable, Iterable, Iterator, Optional
+
+import numpy as np
+
+from .synthetic import CTRDataset, note_dropped_remainder
+
+_DONE = object()
+_KEYS = ("ids", "dense", "labels")
+
+
+def batches_from_events(events: Iterable[dict], batch_size: int,
+                        *, drop_remainder: bool = True) -> Iterator[dict]:
+    """Re-batch variable-length events into exact ``batch_size`` batches.
+
+    Rows carry over between events (an event is whatever arrived, not a
+    batch), so no row is lost at event boundaries; only the final
+    sub-batch tail at end-of-stream follows ``drop_remainder`` (noted via
+    the shared one-time tail note). Static batch shapes keep every
+    training step on one compiled executable, exactly as in the epoch
+    path.
+    """
+    if batch_size < 1:
+        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+    buf: dict = {k: [] for k in _KEYS}
+    buffered = 0
+    total = 0
+    for ev in events:
+        n = len(ev["labels"])
+        if n == 0:
+            continue
+        total += n
+        buffered += n
+        for k in _KEYS:
+            buf[k].append(np.asarray(ev[k]))
+        while buffered >= batch_size:
+            cat = {k: part[0] if len(part) == 1 else np.concatenate(part)
+                   for k, part in buf.items()}
+            yield {k: cat[k][:batch_size] for k in _KEYS}
+            for k in _KEYS:
+                buf[k] = [cat[k][batch_size:]]
+            buffered -= batch_size
+    if buffered:
+        if not drop_remainder:
+            raise ValueError(
+                "streaming requires drop_remainder=True (the compiled step "
+                f"needs static batch shapes; {buffered} tail rows do not "
+                "fill a batch)")
+        note_dropped_remainder(total, batch_size)
+
+
+def chunks_from_batches(batches: Iterable[dict], scan_steps: int
+                        ) -> Iterator[dict]:
+    """Stack batches into contiguous ``[k, batch, ...]`` chunks.
+
+    ``k == scan_steps`` except possibly for the stream's final chunk,
+    which carries the leftover ``k < scan_steps`` whole batches — same
+    contract as ``prefetch.chunk_epoch``, so the scan engine's chunk
+    runner consumes either source unchanged.
+    """
+    if scan_steps < 1:
+        raise ValueError(f"scan_steps must be >= 1, got {scan_steps}")
+    pend: list = []
+    for b in batches:
+        pend.append(b)
+        if len(pend) == scan_steps:
+            yield {k: np.stack([p[k] for p in pend]) for k in _KEYS}
+            pend = []
+    if pend:
+        yield {k: np.stack([p[k] for p in pend]) for k in _KEYS}
+
+
+class ChunkStream:
+    """A thread-fed, bounded queue of training chunks from an event stream.
+
+    The worker re-batches and stacks on its own thread (daemon, named
+    ``repro-stream``) while the training loop consumes; ``buffer_size``
+    bounds host memory at that many staged chunks. Iterate it (or call
+    ``close()`` / use as a context manager); closing stops the worker
+    promptly and a worker error re-raises in the consumer — the
+    ``data.prefetch`` contract, for a source with no epoch boundary.
+    """
+
+    def __init__(self, events: Iterable[dict], batch_size: int,
+                 scan_steps: int = 1, *, buffer_size: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, buffer_size))
+        self._stop = threading.Event()
+        self._failure: list = []
+        self._events = events
+        self._batch_size = batch_size
+        self._scan_steps = scan_steps
+        self._worker = threading.Thread(
+            target=self._work, daemon=True, name="repro-stream")
+        self._worker.start()
+
+    def _work(self):
+        try:
+            chunks = chunks_from_batches(
+                batches_from_events(self._events, self._batch_size),
+                self._scan_steps)
+            for chunk in chunks:
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(chunk, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
+        except BaseException as e:  # re-raised in the consumer
+            self._failure.append(e)
+        finally:
+            while not self._stop.is_set():
+                try:
+                    self._q.put(_DONE, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> Iterator[dict]:
+        try:
+            while True:
+                item = self._q.get()
+                if item is _DONE:
+                    break
+                yield item
+            if self._failure:
+                raise self._failure[0]
+        finally:
+            self.close()
+
+    def close(self):
+        """Stop the worker and drain staged chunks (idempotent). The
+        source's generator is closed with the worker, so a file-tail
+        source releases its handle."""
+        self._stop.set()
+        close = getattr(self._events, "close", None)
+        if close is not None:
+            try:
+                close()
+            except Exception:
+                pass
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def stream_chunks(events: Iterable[dict], batch_size: int,
+                  scan_steps: int = 1, *, buffer_size: int = 2
+                  ) -> ChunkStream:
+    """The composition ``train_ctr(mode="stream")`` consumes: events ->
+    exact batches -> ``[k, batch, ...]`` chunks, staged ``buffer_size``
+    deep on a worker thread."""
+    return ChunkStream(events, batch_size, scan_steps,
+                       buffer_size=buffer_size)
+
+
+def synthetic_event_stream(ds: CTRDataset, *, events: Optional[int] = None,
+                           rows_per_event: int = 256, seed: int = 0
+                           ) -> Iterator[dict]:
+    """An endless (or ``events``-bounded) event source over a dataset:
+    repeated reshuffled passes, sliced into ``rows_per_event`` events —
+    the CLI/bench stand-in for a production log tail. Each pass reshuffles
+    with a fresh sub-seed, so the stream never repeats batch composition.
+    """
+    n = len(ds)
+    rng = np.random.default_rng(seed)
+    emitted = 0
+    while True:
+        order = rng.permutation(n)
+        for start in range(0, n, rows_per_event):
+            if events is not None and emitted >= events:
+                return
+            idx = order[start:start + rows_per_event]
+            yield {"ids": ds.ids[idx], "dense": ds.dense[idx],
+                   "labels": ds.labels[idx]}
+            emitted += 1
+
+
+def follow_tsv_events(path: str, vocab_sizes, n_dense: int, *,
+                      rows_per_event: int = 256, poll_s: float = 0.05,
+                      idle_timeout_s: Optional[float] = None,
+                      stop: Optional[Callable[[], bool]] = None
+                      ) -> Iterator[dict]:
+    """Tail a growing TSV of ``label <tab> dense... <tab> ids...`` rows.
+
+    Yields an event whenever ``rows_per_event`` complete lines have
+    accumulated (partially written last lines are left for the next
+    poll). The follow ends when ``stop()`` returns true or no new bytes
+    arrive for ``idle_timeout_s`` (None tails forever); a final short
+    event flushes whatever is pending. This is the file-tail flavor of
+    the stream contract — same event dicts as ``synthetic_event_stream``.
+    """
+    n_fields = len(vocab_sizes)
+    pend: list = []
+    idle = 0.0
+
+    def flush():
+        rows = np.asarray(pend, np.float64)
+        ev = {
+            "labels": rows[:, 0].astype(np.float32),
+            "dense": rows[:, 1:1 + n_dense].astype(np.float32),
+            "ids": rows[:, 1 + n_dense:1 + n_dense + n_fields].astype(
+                np.int32),
+        }
+        pend.clear()
+        return ev
+
+    with open(path) as f:
+        carry = ""
+        while True:
+            if stop is not None and stop():
+                break
+            data = f.read()
+            if not data:
+                if idle_timeout_s is not None:
+                    idle += poll_s
+                    if idle >= idle_timeout_s:
+                        break
+                time.sleep(poll_s)
+                continue
+            idle = 0.0
+            lines = (carry + data).split("\n")
+            carry = lines.pop()          # possibly incomplete last line
+            for line in lines:
+                if not line.strip():
+                    continue
+                pend.append([float(x) for x in line.split("\t")])
+                if len(pend) >= rows_per_event:
+                    yield flush()
+        if pend:
+            yield flush()
+
+
+def write_tsv_rows(path: str, ds: CTRDataset, start: int, stop: int):
+    """Append rows ``[start, stop)`` of a dataset in the TSV layout
+    ``follow_tsv_events`` reads — the producer half for tests and the
+    streaming smoke (os.fsync'd so a concurrent tailer sees the bytes)."""
+    with open(path, "a") as f:
+        for i in range(start, stop):
+            cells = ([f"{ds.labels[i]:.0f}"]
+                     + [f"{x:.6f}" for x in ds.dense[i]]
+                     + [str(int(x)) for x in ds.ids[i]])
+            f.write("\t".join(cells) + "\n")
+        f.flush()
+        os.fsync(f.fileno())

@@ -27,30 +27,40 @@ import numpy as np
 
 logger = logging.getLogger(__name__)
 
-# (n_rows, batch_size) pairs already reported by note_dropped_remainder —
-# the tail-drop note fires once per distinct shape, not once per epoch
+# (n_rows, batch_size) pairs note_dropped_remainder has seen (kept for
+# introspection/tests) and the process-wide one-shot: the note fires once
+# per *process*, not once per distinct shape — a streaming source re-opens
+# as it grows, so every re-open used to present a fresh (n, batch) pair
+# and re-fire what was meant to be a one-time note
 _noted_remainders: set = set()
+_tail_note_fired: bool = False
 
 
 def note_dropped_remainder(n: int, batch_size: int) -> None:
-    """One-time note that a sub-batch row tail is being dropped.
+    """One-time (per process) note that a sub-batch row tail is dropped.
 
-    ``train_ctr`` (and the engine's ``chunk_epoch``) iterate with
-    ``drop_remainder=True`` — static batch shapes keep every step on one
-    compiled executable — which silently discarded up to ``batch_size - 1``
-    rows per epoch. Surfacing it once per (dataset, batch) shape makes the
-    loss of data explicit; evaluation always runs with
+    ``train_ctr`` (and the engine's ``chunk_epoch``, and the streaming
+    re-batcher at end-of-stream) iterate with ``drop_remainder=True`` —
+    static batch shapes keep every step on one compiled executable — which
+    silently discarded up to ``batch_size - 1`` rows per epoch. Surfacing
+    it once makes the loss of data explicit; evaluation always runs with
     ``drop_remainder=False`` and never drops rows. Documented in
     docs/cli.md ("Batching and the row tail").
     """
+    global _tail_note_fired
     rem = n % batch_size
-    if rem and (n, batch_size) not in _noted_remainders:
-        _noted_remainders.add((n, batch_size))
-        logger.warning(
-            "[data] dropping a %d-row tail each epoch (%d rows / batch %d); "
-            "static step shapes require whole batches — shrink the batch or "
-            "pass drop_remainder=False where supported (eval already does)",
-            rem, n, batch_size)
+    if not rem:
+        return
+    _noted_remainders.add((n, batch_size))
+    if _tail_note_fired:
+        return
+    _tail_note_fired = True
+    logger.warning(
+        "[data] dropping a %d-row tail each epoch (%d rows / batch %d); "
+        "static step shapes require whole batches — shrink the batch or "
+        "pass drop_remainder=False where supported (eval already does). "
+        "Further tail-drop notes are suppressed for this process",
+        rem, n, batch_size)
 
 
 @dataclasses.dataclass

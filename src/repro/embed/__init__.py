@@ -1,12 +1,15 @@
 """repro.embed — the EmbeddingStore abstraction.
 
-One facade (``store.EmbeddingStore``) over the four embedding placements
-(dense, sparse unique-id, mesh-sharded, and the sharded+sparse hybrid),
-each yielding the same ``TrainStepBundle`` contract; ``sharded`` carries
-the row-shard plans and ``shard_map`` building blocks
-(``sharded.RowShardPlan``), ``sharded_sparse`` the per-shard unique-id
-dedup and row-update phases. See docs/architecture.md."""
+One facade (``store.EmbeddingStore``) over the five embedding placements
+(dense, sparse unique-id, mesh-sharded, the sharded+sparse hybrid, and the
+streaming hot/cold two-tier cache), each yielding the same
+``TrainStepBundle`` contract; ``sharded`` carries the row-shard plans and
+``shard_map`` building blocks (``sharded.RowShardPlan``),
+``sharded_sparse`` the per-shard unique-id dedup and row-update phases,
+``hotcold`` the frequency-ranked hot working set over a host-memory cold
+tier. See docs/architecture.md and docs/streaming.md."""
 
+from .hotcold import hot_tier_bytes, make_hotcold_train_step, resident_ids
 from .sharded import RowShardPlan, default_mesh, make_plans
 from .sharded_sparse import ShardUniqueSets, shard_capacity, shard_unique_sets
 from .store import PLACEMENTS, EmbeddingStore, resolve_path, store_for

@@ -22,6 +22,14 @@ rows live and how their optimizer update runs:
                 L2 decay, so per-device memory is O(vocab / n_model) and
                 update traffic is O(batch) simultaneously. Capacity overflow
                 on a shard falls back to that shard's dense update (exact).
+* ``hotcold`` — two-tier streaming placement (repro.embed.hotcold): a
+                fixed-capacity device-resident working set of hot rows
+                (admission by cumulative batch frequency) over the full
+                host-memory table; eviction writes back the raw row +
+                ``last_step`` and the closed-form lazy-decay catch-up
+                replays pending decay on re-admission, so the math is
+                bit-identical to ``sparse``. Device-resident memory is
+                O(capacity), update traffic O(batch).
 
 Which to pick: dense until the table update dominates the step (vocab around
 10^6 at CTR batch sizes), sparse while one device still holds the tables,
@@ -57,7 +65,7 @@ import jax
 from ..core import builders
 from ..core.builders import TRAIN_PATHS, TrainStepBundle
 
-PLACEMENTS = ("dense", "sparse", "sharded", "sharded_sparse")
+PLACEMENTS = ("dense", "sparse", "sharded", "sharded_sparse", "hotcold")
 
 # core.build_train_step path name (TRAIN_PATHS) -> (placement, dense kernel)
 _PATH_TO_STORE = {
@@ -66,6 +74,7 @@ _PATH_TO_STORE = {
     "sparse": ("sparse", "auto"),
     "sharded": ("sharded", "auto"),
     "sharded_sparse": ("sharded_sparse", "auto"),
+    "hotcold": ("hotcold", "auto"),
 }
 
 
@@ -77,6 +86,7 @@ class EmbeddingStore:
     kernel: str = "substrate"     # dense only: "substrate" | "fused"
     mesh: Any = None              # sharded only; None -> all local devices
     partition: str = "div"        # sharded only: "div" | "mod" row mapping
+    hot_capacity: int = 4096      # hotcold only: hot rows per field
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
@@ -94,6 +104,9 @@ class EmbeddingStore:
                     f"{self.partition} partition)")
         if self.placement == "dense":
             return f"dense({self.kernel})"
+        if self.placement == "hotcold":
+            return (f"hotcold({self.hot_capacity} hot rows/field, "
+                    f"freq-ranked admission, cold host tier)")
         return self.placement
 
     def make_bundle(
@@ -146,6 +159,16 @@ class EmbeddingStore:
                 cfg, hp, r=r, zeta=zeta, dense_tx=dense_tx,
                 use_kernel=use_kernel, clip=clip_kind == "adaptive_column",
                 b1=b1, b2=b2, eps=eps)
+            return TrainStepBundle(step, init, flush,
+                                   scan_step=step.scan_step)
+
+        if self.placement == "hotcold":
+            from . import hotcold as hotcold_lib
+
+            step, init, flush = hotcold_lib.make_hotcold_train_step(
+                cfg, hp, capacity=self.hot_capacity, r=r, zeta=zeta,
+                dense_tx=dense_tx, use_kernel=use_kernel,
+                clip=clip_kind == "adaptive_column", b1=b1, b2=b2, eps=eps)
             return TrainStepBundle(step, init, flush,
                                    scan_step=step.scan_step)
 
@@ -221,9 +244,10 @@ def store_for(
     path: Optional[str] = None,
     mesh: Any = None,
     partition: str = "div",
+    hot_capacity: int = 4096,
 ) -> EmbeddingStore:
     """The store for a config: routes legacy path names and the config's
-    ``placement``/``sparse`` knobs onto one of the three placements."""
+    ``placement``/``sparse`` knobs onto one of the placements."""
     path = resolve_path(cfg, path)
     placement, kernel = _PATH_TO_STORE[path]
     if placement == "dense" and kernel == "fused" and getattr(cfg, "sparse", False):
@@ -231,4 +255,4 @@ def store_for(
         # route here so the bundle carries the sparse flush
         placement, kernel = "sparse", "auto"
     return EmbeddingStore(placement=placement, kernel=kernel, mesh=mesh,
-                          partition=partition)
+                          partition=partition, hot_capacity=hot_capacity)

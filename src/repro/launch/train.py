@@ -20,6 +20,9 @@ Usage:
   # the sharded+sparse hybrid (per-shard unique-id updates) on the same mesh:
   PYTHONPATH=src python -m repro.launch.train --task ctr \
       --placement sharded_sparse --mesh 2,4 --host-devices 8 --batch 8192
+  # streaming online training on the hot/cold two-tier placement:
+  PYTHONPATH=src python -m repro.launch.train --task ctr --mode stream \
+      --placement hotcold --hot-capacity 4096 --batch 8192 --steps 200
   PYTHONPATH=src python -m repro.launch.train --task lm --arch gemma3-12b \
       --reduced --steps 100
 """
@@ -77,6 +80,9 @@ def run_ctr(args) -> None:
                               seed=args.seed)
     tr, te = ds.split(0.9)
     placement = resolve_placement(args.placement, args.sparse)
+    if args.mode == "stream" and args.steps is None:
+        raise SystemExit("[train] --mode stream has no epoch boundary; pass "
+                         "--steps to bound the run")
     cfg = ctr_lib.CTRConfig(
         name=args.model, vocab_sizes=ds.vocab_sizes,
         n_dense=ds.dense.shape[1], emb_dim=args.emb_dim,
@@ -91,13 +97,16 @@ def run_ctr(args) -> None:
         int(np.prod(x.shape)) for x in jax.tree.leaves(
             jax.eval_shape(lambda: ctr_lib.init(jax.random.key(0), cfg)))
     )
-    store = store_for(cfg, mesh=mesh, partition=args.partition)
+    store = store_for(cfg, mesh=mesh, partition=args.partition,
+                      hot_capacity=args.hot_capacity)
     engine_desc = (f"scan x{args.scan_steps}" if args.engine == "scan"
                    else "eager")
+    mode_desc = ("stream (online, no epochs)" if args.mode == "stream"
+                 else "epochs")
     print(f"[train] {args.model}: {n_params/1e6:.1f}M params "
           f"({len(tr)} train rows, batch {args.batch}, rule {args.rule}, "
           f"embedding store {store.describe()}, engine {engine_desc}, "
-          f"compute {args.compute_dtype})")
+          f"mode {mode_desc}, compute {args.compute_dtype})")
 
     hp = scale_hyperparams(
         args.rule, base_lr=args.base_lr, base_l2=args.base_l2,
@@ -121,11 +130,24 @@ def run_ctr(args) -> None:
         trace_ctx = jax.profiler.trace(args.profile_trace,
                                        create_perfetto_trace=True)
         print(f"[train] profiling to {args.profile_trace} (perfetto trace)")
+    stream = None
+    if args.mode == "stream":
+        # online training: the train split replayed as an endless event
+        # stream (the CLI stand-in for a production log tail), re-batched
+        # and chunk-stacked on a worker thread
+        from ..data import stream as stream_lib
+
+        events = stream_lib.synthetic_event_stream(
+            tr, rows_per_event=max(1, args.batch // 2), seed=args.seed)
+        stream = stream_lib.stream_chunks(
+            events, args.batch,
+            args.scan_steps if args.engine == "scan" else 1)
     with trace_ctx:
         res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
                         epochs=args.epochs, seed=args.seed, log_fn=print,
                         step_bundle=bundle, max_steps=args.steps,
-                        engine=args.engine, scan_steps=args.scan_steps)
+                        engine=args.engine, scan_steps=args.scan_steps,
+                        mode=args.mode, stream=stream)
     print(f"[train] done: {res.steps} steps in {res.seconds:.1f}s "
           f"-> AUC {100*res.final_eval['auc']:.2f} "
           f"logloss {res.final_eval['logloss']:.4f}")
@@ -235,10 +257,19 @@ def main():
     ap.add_argument("--zeta", type=float, default=1e-5)
     ap.add_argument("--placement", default=None,
                     choices=("substrate", "fused", "sparse", "sharded",
-                             "sharded_sparse"),
+                             "sharded_sparse", "hotcold"),
                     help="embedding store placement (repro.embed); default "
                          "substrate. sharded_sparse = row-sharded tables "
-                         "with per-shard unique-id updates (docs/cli.md)")
+                         "with per-shard unique-id updates (docs/cli.md); "
+                         "hotcold = device-resident hot working set over a "
+                         "host cold tier (docs/streaming.md)")
+    ap.add_argument("--mode", default="epochs", choices=("epochs", "stream"),
+                    help="'stream' trains online from an endless event "
+                         "stream (no epochs; requires --steps) — the "
+                         "streaming path docs/streaming.md describes")
+    ap.add_argument("--hot-capacity", type=int, default=4096,
+                    help="hotcold placement: device-resident hot rows per "
+                         "field (admission by cumulative id frequency)")
     ap.add_argument("--sparse", action="store_true",
                     help="DEPRECATED alias for --placement sparse; errors "
                          "if --placement names anything else")

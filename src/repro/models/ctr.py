@@ -45,7 +45,8 @@ class CTRConfig:
     unique_capacity: int = 0
     # Embedding placement (repro.embed.EmbeddingStore): one of
     # core.TRAIN_PATHS ("substrate" | "fused" | "sparse" | "sharded" |
-    # "sharded_sparse"). None defers to the legacy ``sparse`` knob above.
+    # "sharded_sparse" | "hotcold"). None defers to the legacy ``sparse``
+    # knob above.
     placement: str | None = None
     # Mixed-precision compute dtype for the forward/backward ("float32" |
     # "bfloat16"), following the models/layers.py convention: tower

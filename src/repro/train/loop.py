@@ -754,6 +754,8 @@ def train_ctr(
     engine: str = "eager",
     scan_steps: int = 8,
     prefetch_buffers: int = 2,
+    mode: str = "epochs",
+    stream=None,
 ) -> TrainResult:
     """Epoch driver. By default steps through the composable-optimizer path
     (``tx``); pass a ``core.builders.TrainStepBundle`` (any
@@ -770,12 +772,27 @@ def train_ctr(
     into one ``lax.scan`` dispatch over prefetched, background-stacked
     batch chunks (``prefetch_buffers`` deep). Both consume the identical
     shuffle order, so results match the eager loop exactly.
+
+    ``mode="stream"`` trains online from ``stream`` — an iterable of
+    ``[k, batch, ...]`` chunks (``data.stream.stream_chunks``): no epochs,
+    no fixed dataset, steps until the stream ends or ``max_steps`` is
+    reached, then one flush + final eval. Both engines work; the eager
+    loop unstacks each chunk, the scan engine dispatches it whole. The
+    chunk geometry (batch size, scan_steps) is the stream's; this
+    function's ``batch_size``/``scan_steps``/``epochs`` are ignored. The
+    stream is closed on exit (also on an early ``max_steps`` cut).
     """
     from . import engine as engine_lib
 
     if engine not in engine_lib.ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected one of "
                          f"{engine_lib.ENGINES}")
+    if mode not in ("epochs", "stream"):
+        raise ValueError(f"unknown mode {mode!r}; expected 'epochs' or "
+                         "'stream'")
+    if (mode == "stream") != (stream is not None):
+        raise ValueError("mode='stream' requires a chunk stream (and a "
+                         "stream requires mode='stream')")
     params = ctr.init(jax.random.key(seed), cfg)
     if step_bundle is not None:
         params = step_bundle.prepare(params)
@@ -794,6 +811,44 @@ def train_ctr(
     history = []
     n_steps = 0
     t0 = time.perf_counter()
+
+    if mode == "stream":
+        try:
+            for chunk in stream:
+                k = chunk["labels"].shape[0]
+                if max_steps is not None and n_steps + k > max_steps:
+                    k = max_steps - n_steps
+                    if k <= 0:
+                        break
+                    chunk = jax.tree.map(lambda x: x[:k], chunk)
+                if engine == "scan":
+                    params, opt_state, _ = runner(
+                        params, opt_state, jax.device_put(chunk))
+                    n_steps += k
+                else:
+                    for i in range(k):
+                        batch = {kk: jnp.asarray(v[i])
+                                 for kk, v in chunk.items()}
+                        params, opt_state, _ = step_fn(
+                            params, opt_state, batch)
+                        n_steps += 1
+                if max_steps is not None and n_steps >= max_steps:
+                    break
+        finally:
+            close = getattr(stream, "close", None)
+            if close is not None:
+                close()
+        seconds = time.perf_counter() - t0
+        if flush is not None:
+            params, opt_state = flush(params, opt_state)
+        final = eval_fn(params, test_ds) if test_ds is not None else {}
+        if log_fn and final:
+            log_fn(f"stream: {n_steps} steps, auc={final['auc']:.4f} "
+                   f"logloss={final['logloss']:.4f}")
+        return TrainResult(history=history, final_eval=dict(final),
+                           seconds=seconds, steps=n_steps, params=params,
+                           opt_state=opt_state)
+
     for epoch in range(epochs):
         if max_steps is not None and n_steps >= max_steps:
             break

@@ -205,6 +205,7 @@ def test_tail_drop_noted_once(dataset, caplog):
     from repro.data import synthetic
 
     synthetic._noted_remainders.discard((len(dataset), 7))
+    synthetic._tail_note_fired = False
     with caplog.at_level(logging.WARNING, logger="repro.data.synthetic"):
         list(iterate_batches(dataset, 7))
         list(iterate_batches(dataset, 7))

@@ -222,6 +222,100 @@ def test_batcher_error_propagates_and_batcher_survives(model):
         assert mb.stats()["errors"] == 1
 
 
+def test_batcher_stress_no_future_lost_or_duplicated():
+    """Many-threaded submit under injected scorer failures: every future
+    resolves exactly once, to exactly its own rows (an echo scorer makes
+    cross-wiring visible), failed dispatches fail only their own callers,
+    and the row/request accounting conserves."""
+    n_threads, per_thread = 24, 20
+    fail_every = 7                           # deterministic injected faults
+    dispatch_no = [0]
+    lock = threading.Lock()
+
+    def echo_score(ids, dense):
+        with lock:
+            dispatch_no[0] += 1
+            k = dispatch_no[0]
+        if k % fail_every == 0:
+            raise RuntimeError(f"injected fault {k}")
+        return ids[:, 0].astype(np.float32)
+
+    results = [[None] * per_thread for _ in range(n_threads)]
+    with MicroBatcher(echo_score, max_batch=32, max_wait_ms=1.0,
+                      max_pending=64) as mb:
+        barrier = threading.Barrier(n_threads)
+
+        def client(t):
+            rng = np.random.default_rng(t)
+            barrier.wait()
+            futs = []
+            for j in range(per_thread):
+                n = int(rng.integers(1, 6))
+                # payload tagged with (thread, request) so an answer from
+                # any other request cannot match
+                ids = np.full((n, 3), t * per_thread + j, np.int32)
+                futs.append((j, ids, mb.submit(ids, np.zeros((n, 3)))))
+            for j, ids, f in futs:
+                try:
+                    results[t][j] = ("ok", f.result(timeout=30), ids)
+                except RuntimeError as e:
+                    results[t][j] = ("err", str(e), ids)
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        s = mb.stats()
+
+    ok = failed = 0
+    for t in range(n_threads):
+        for j in range(per_thread):
+            assert results[t][j] is not None, (t, j)    # nothing dropped
+            kind, val, ids = results[t][j]
+            if kind == "ok":
+                ok += 1
+                np.testing.assert_array_equal(
+                    val, ids[:, 0].astype(np.float32))  # nothing cross-wired
+            else:
+                failed += 1
+                assert "injected fault" in val
+    assert ok + failed == n_threads * per_thread        # nothing duplicated
+    assert s["requests"] == n_threads * per_thread
+    assert s["errors"] == dispatch_no[0] // fail_every
+    assert failed > 0 and ok > 0
+
+
+def test_batcher_deadline_opens_at_pickup_not_submit():
+    """The coalescing window starts when the worker picks up a batch's
+    first request: requests queued while the worker is busy — even ones
+    submitted further apart than max_wait_ms — coalesce into the next
+    dispatch instead of each opening its own stale window."""
+    shapes = []
+    release = threading.Event()
+
+    def gated_score(ids, dense):
+        shapes.append(ids.shape[0])
+        if len(shapes) == 1:
+            release.wait(timeout=10)         # hold the worker on dispatch 1
+        return np.zeros(ids.shape[0], np.float32)
+
+    ids, dense = _rows(4)
+    with MicroBatcher(gated_score, max_batch=16, max_wait_ms=2.0) as mb:
+        f1 = mb.submit(ids[:1], dense[:1])
+        time.sleep(0.05)                     # worker is now inside dispatch 1
+        f2 = mb.submit(ids[1:2], dense[1:2])
+        time.sleep(0.05)                     # 50ms >> max_wait_ms apart
+        f3 = mb.submit(ids[2:4], dense[2:4])
+        release.set()
+        for f in (f1, f2, f3):
+            f.result(timeout=10)
+        s = mb.stats()
+    assert shapes == [1, 3]                  # 2nd+3rd coalesced at pickup
+    assert s["dispatches"] == 2
+
+
 def test_batcher_rejects_bad_requests(model):
     cfg, params = model
     ids, dense = _rows(40)
