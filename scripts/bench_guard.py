@@ -39,6 +39,15 @@ MICRO_QPS_FLOOR = 5.0
 STREAM_ROWS_FLOOR = 0.7
 STREAM_BYTES_CEIL = 0.25
 
+# acceptance gates from the out-of-core cold store (ISSUE 9): overlapping
+# host-side migration planning with the device step must buy >= 1.1x the
+# synchronous hotcold placement's throughput (the planning it removed
+# from the jitted step), and the big-vocab mmap run's sampled peak RSS
+# growth must stay <= half the on-disk table bytes (the out-of-core
+# claim: training never pages the whole table in)
+ASYNC_SPEEDUP_FLOOR = 1.1
+MMAP_RSS_CEIL = 0.5
+
 
 def _load(path):
     with open(path) as f:
@@ -79,11 +88,22 @@ def _is_streaming(d):
         for r in d.get("records", []))
 
 
+def _streaming_by(d):
+    """Records keyed by placement, async ones suffixed _on/_off."""
+    by = {}
+    for r in d.get("records", []):
+        key = r["placement"]
+        if "overlap" in r:
+            key += "_on" if r["overlap"] else "_off"
+        by[key] = r
+    return by
+
+
 def streaming_ratios(d):
-    by = {r["placement"]: r for r in d.get("records", [])}
+    by = _streaming_by(d)
     if not {"dense", "sparse", "hotcold"} <= set(by):
         return {}
-    return {
+    out = {
         "hotcold_over_sparse_rows_per_sec":
             by["hotcold"]["rows_per_sec"] / max(by["sparse"]["rows_per_sec"],
                                                 1e-9),
@@ -91,6 +111,17 @@ def streaming_ratios(d):
             by["hotcold"]["device_bytes"] / max(by["dense"]["device_bytes"],
                                                 1e-9),
     }
+    for backend in ("mem", "mmap"):
+        rec = by.get(f"hotcold_async_{backend}_on")
+        if rec is not None:
+            out[f"async_{backend}_over_hotcold_rows_per_sec"] = (
+                rec["rows_per_sec"]
+                / max(by["hotcold"]["rows_per_sec"], 1e-9))
+    big = by.get("hotcold_async_mmap_big")
+    if big is not None and big.get("cold_store_bytes"):
+        out["mmap_big_rss_over_cold_store_bytes"] = (
+            big["peak_rss_delta"] / max(big["cold_store_bytes"], 1e-9))
+    return out
 
 
 def guard_streaming(base, fresh, tol):
@@ -119,6 +150,33 @@ def guard_streaming(base, fresh, tol):
           f"(hard ceiling {STREAM_BYTES_CEIL:.2f}x) {status}")
     if fb > STREAM_BYTES_CEIL:
         failed = True
+    fa = fresh_r.get("async_mem_over_hotcold_rows_per_sec")
+    if fa is not None:
+        # baseline-relative tolerance plus the hard overlap-speedup floor
+        ba = base_r.get("async_mem_over_hotcold_rows_per_sec")
+        if ba is not None:
+            floor = ba * (1.0 - tol)
+            status = "ok" if fa >= floor else "REGRESSED"
+            print(f"async_mem(on)/hotcold rows_per_sec: {fa:.3f}x vs "
+                  f"baseline {ba:.3f}x (floor {floor:.3f}x) {status}")
+            if fa < floor:
+                failed = True
+        status = "ok" if fa >= ASYNC_SPEEDUP_FLOOR else "REGRESSED"
+        print(f"async_mem(on)/hotcold rows_per_sec: {fa:.3f}x (hard floor "
+              f"{ASYNC_SPEEDUP_FLOOR:.2f}x) {status}")
+        if fa < ASYNC_SPEEDUP_FLOOR:
+            failed = True
+    elif "async_mem_over_hotcold_rows_per_sec" in base_r:
+        print("async_mem(on) record present in baseline but missing from "
+              "fresh file REGRESSED")
+        failed = True
+    fm = fresh_r.get("mmap_big_rss_over_cold_store_bytes")
+    if fm is not None:
+        status = "ok" if fm <= MMAP_RSS_CEIL else "REGRESSED"
+        print(f"mmap big-vocab peak_rss_delta/cold_store_bytes: {fm:.3f}x "
+              f"(hard ceiling {MMAP_RSS_CEIL:.2f}x) {status}")
+        if fm > MMAP_RSS_CEIL:
+            failed = True
     return 1 if failed else 0
 
 

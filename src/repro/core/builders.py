@@ -195,6 +195,16 @@ class TrainStepBundle(NamedTuple):
              dispatch. None falls back to scanning ``step`` itself
              (jit-under-jit inlines), minus chunk-level callback
              relocation.
+    stream_transform: optional factory ``(max_steps=None) -> transform``
+             for ``data.stream.ChunkStream``: runs on the stream's worker
+             thread so host-side planning (the async hotcold migration
+             planner) overlaps the device step; returning None from the
+             transform ends the stream at the step budget.
+    stream_driver: optional ``(params, state, stream, *, max_steps) ->
+             (params, state, steps, stats)`` replacing the generic stream
+             loop in ``train_ctr(mode="stream")`` — bundles that must
+             interleave host work with each dispatch (filling eviction
+             handles) own their consume loop.
     """
 
     step: Callable
@@ -203,6 +213,8 @@ class TrainStepBundle(NamedTuple):
     prepare: Callable = identity_prepare
     export: Callable = identity_prepare
     scan_step: Optional[Callable] = None
+    stream_transform: Optional[Callable] = None
+    stream_driver: Optional[Callable] = None
 
 
 TRAIN_PATHS = ("substrate", "fused", "sparse", "sharded", "sharded_sparse",
@@ -226,6 +238,10 @@ def build_train_step(
     mesh=None,
     partition: str = "div",
     hot_capacity: int = 4096,
+    cold_store: str = "none",
+    cold_dir: Optional[str] = None,
+    admission: str = "cumulative",
+    half_life: int = 0,
 ) -> TrainStepBundle:
     """Route a CTR train step through one of the six update paths, all
     served by the ``repro.embed.EmbeddingStore`` placements:
@@ -246,7 +262,15 @@ def build_train_step(
       hotcold        : two-tier streaming placement — a fixed-capacity
                        (``hot_capacity`` rows/field) frequency-ranked hot
                        working set over the full cold table, bit-identical
-                       math to "sparse" via the lazy-decay catch-up
+                       math to "sparse" via the lazy-decay catch-up.
+                       ``cold_store="mem"|"mmap"`` moves the cold tier
+                       out of the jitted step entirely (embed/coldstore +
+                       embed/migrate): host/disk tables, host-side
+                       migration planning overlapped with the step, and
+                       — with "mmap" + ``cold_dir`` — vocab bounded by
+                       disk instead of RAM, with bit-exact
+                       flush/reopen/resume. ``admission``/``half_life``
+                       select the frequency policy for either variant.
 
     ``path=None`` honors the config knobs: ``cfg.placement`` if set, else
     ``cfg.sparse`` selects "sparse", otherwise "substrate".
@@ -258,7 +282,9 @@ def build_train_step(
     from ..embed.store import store_for  # deferred: embed imports core
 
     store = store_for(cfg, path=path, mesh=mesh, partition=partition,
-                      hot_capacity=hot_capacity)
+                      hot_capacity=hot_capacity, cold_store=cold_store,
+                      cold_dir=cold_dir, admission=admission,
+                      half_life=half_life)
     return store.make_bundle(
         cfg, hp, clip_kind=clip_kind, r=r, zeta=zeta, clip_t=clip_t,
         warmup_steps=warmup_steps, b1=b1, b2=b2, eps=eps,

@@ -106,16 +106,24 @@ class ChunkStream:
     ``close()`` / use as a context manager); closing stops the worker
     promptly and a worker error re-raises in the consumer — the
     ``data.prefetch`` contract, for a source with no epoch boundary.
+
+    ``transform`` (optional) runs on the worker thread over each stacked
+    chunk before it is queued — the hook the async hot/cold placement uses
+    to plan row migrations one chunk ahead of the consumer. It may return
+    a wrapped item (any object the consumer recognizes) or ``None`` to end
+    the stream cleanly at a step budget.
     """
 
     def __init__(self, events: Iterable[dict], batch_size: int,
-                 scan_steps: int = 1, *, buffer_size: int = 2):
+                 scan_steps: int = 1, *, buffer_size: int = 2,
+                 transform: Optional[Callable] = None):
         self._q: queue.Queue = queue.Queue(maxsize=max(1, buffer_size))
         self._stop = threading.Event()
         self._failure: list = []
         self._events = events
         self._batch_size = batch_size
         self._scan_steps = scan_steps
+        self._transform = transform
         self._worker = threading.Thread(
             target=self._work, daemon=True, name="repro-stream")
         self._worker.start()
@@ -126,6 +134,10 @@ class ChunkStream:
                 batches_from_events(self._events, self._batch_size),
                 self._scan_steps)
             for chunk in chunks:
+                if self._transform is not None:
+                    chunk = self._transform(chunk)
+                    if chunk is None:
+                        return
                 while not self._stop.is_set():
                     try:
                         self._q.put(chunk, timeout=0.1)
@@ -182,13 +194,14 @@ class ChunkStream:
 
 
 def stream_chunks(events: Iterable[dict], batch_size: int,
-                  scan_steps: int = 1, *, buffer_size: int = 2
-                  ) -> ChunkStream:
+                  scan_steps: int = 1, *, buffer_size: int = 2,
+                  transform: Optional[Callable] = None) -> ChunkStream:
     """The composition ``train_ctr(mode="stream")`` consumes: events ->
     exact batches -> ``[k, batch, ...]`` chunks, staged ``buffer_size``
-    deep on a worker thread."""
+    deep on a worker thread. ``transform`` runs per chunk on the worker
+    (see ``ChunkStream``)."""
     return ChunkStream(events, batch_size, scan_steps,
-                       buffer_size=buffer_size)
+                       buffer_size=buffer_size, transform=transform)
 
 
 def synthetic_event_stream(ds: CTRDataset, *, events: Optional[int] = None,

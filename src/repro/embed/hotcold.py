@@ -28,11 +28,16 @@ chain can land an ulp apart — far inside the <= 1e-5 tolerance both
 placements carry vs the dense substrate.
 
 Admission policy: after each step the hot set becomes the top-``capacity``
-ids by cumulative batch frequency among {current residents} ∪ {this
-batch's ids}, ties broken by lower id. Because frequencies only grow and
-are residency-independent, this keeps the hot set equal to the global
-top-``capacity`` of all ids touched so far — which makes the hit rate
-provably monotone non-decreasing in capacity (tests/test_hotcold.py).
+ids by batch frequency among {current residents} ∪ {this batch's ids},
+ties broken by lower id. Two frequency policies (``admission=``):
+``"cumulative"`` counts (the default — frequencies only grow, so the hot
+set equals the global top-``capacity`` of all ids touched so far, which
+makes the hit rate provably monotone non-decreasing in capacity,
+tests/test_hotcold.py), and ``"decayed"`` — counts halved every
+``half_life`` steps before each batch is added, so a drifting stream's
+stale head ages out. Both are residency- and capacity-independent
+(frequency depends only on the batches seen), which is the property the
+bitwise capacity-independence test pins down for any policy.
 
 On this container the "device" is CPU-backed, so — as with the serving
 cache — the win is architectural rather than wall-clock: the per-step
@@ -57,12 +62,33 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import optim as optim_lib
 from ..core.cowclip import cowclip_rows
 from ..models import ctr
 
-__all__ = ["make_hotcold_train_step", "hot_tier_bytes", "resident_ids"]
+__all__ = ["make_hotcold_train_step", "make_migrate_device_step",
+           "hot_tier_bytes", "residency_map_bytes", "resident_ids",
+           "admission_alpha", "ADMISSIONS"]
+
+ADMISSIONS = ("cumulative", "decayed")
+
+
+def admission_alpha(admission: str, half_life: int):
+    """Per-step frequency decay factor for the admission policy: ``None``
+    for cumulative counts, else the f32 ``0.5 ** (1 / half_life)`` both
+    the device step and the host planner multiply in before each batch's
+    counts (f32 so the two sides stay bitwise in agreement)."""
+    if admission not in ADMISSIONS:
+        raise ValueError(f"unknown admission policy {admission!r}; "
+                         f"expected one of {ADMISSIONS}")
+    if admission == "cumulative":
+        return None
+    if half_life < 1:
+        raise ValueError(f"decayed admission needs --half-life >= 1, "
+                         f"got {half_life}")
+    return np.float32(0.5 ** (1.0 / float(half_life)))
 
 
 def _top_c_mask(prio_bits, ids, valid, c: int):
@@ -129,8 +155,6 @@ def _field_caps(vocab_sizes, capacity: int) -> dict:
 def resident_ids(state) -> dict:
     """Per-field int32 arrays of currently hot ids (sentinel-free).
     A slot is occupied iff its id indexes a real table row."""
-    import numpy as np
-
     out = {}
     for f, sid in state["hot"]["slot_ids"].items():
         s = np.asarray(sid)
@@ -138,13 +162,35 @@ def resident_ids(state) -> dict:
     return out
 
 
+_RESIDENCY_MAP_KEYS = ("slot_of", "freq")
+
+
 def hot_tier_bytes(state) -> int:
-    """Bytes of the device-resident working set: hot rows (w, m, v, ls)
-    plus the residency/frequency maps. The cold tables (params["embed"],
-    state m/v/last_step) are the host-memory tier and excluded."""
+    """Bytes of the O(capacity) device-resident working set: hot rows
+    (w, m, v, ls) plus the per-slot id map. The O(vocab) residency/
+    frequency maps are *not* counted here — they scale with vocab, not
+    with the working set, and the async migration path keeps them on the
+    host entirely; ``residency_map_bytes`` reports them separately. The
+    cold tables (params["embed"], state m/v/last_step) are the
+    host-memory tier and excluded from both."""
     total = 0
-    for leaf in jax.tree.leaves(state["hot"]):
-        total += leaf.size * leaf.dtype.itemsize
+    for k, sub in state["hot"].items():
+        if k in _RESIDENCY_MAP_KEYS:
+            continue
+        for leaf in jax.tree.leaves(sub):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def residency_map_bytes(state) -> int:
+    """Bytes of the O(vocab) residency/frequency maps (``slot_of``,
+    ``freq``). Device-resident in the synchronous step, host-resident in
+    the async migration path — either way they are bookkeeping that grows
+    with vocab, so benchmarks report them apart from the hot tier."""
+    total = 0
+    for k in _RESIDENCY_MAP_KEYS:
+        for leaf in jax.tree.leaves(state["hot"].get(k, {})):
+            total += leaf.size * leaf.dtype.itemsize
     return total
 
 
@@ -152,7 +198,9 @@ def make_hotcold_train_step(cfg: ctr.CTRConfig, hp, *, capacity: int = 4096,
                             r: float = 1.0, zeta: float = 1e-5,
                             dense_tx=None, use_kernel: bool = False,
                             clip: bool = True, b1: float = 0.9,
-                            b2: float = 0.999, eps: float = 1e-8):
+                            b2: float = 0.999, eps: float = 1e-8,
+                            admission: str = "cumulative",
+                            half_life: int = 0):
     """Build the hotcold placement's ``(step, init, flush)``.
 
     Per step, each field's batch ids are deduplicated once
@@ -176,6 +224,7 @@ def make_hotcold_train_step(cfg: ctr.CTRConfig, hp, *, capacity: int = 4096,
     adam_kw = dict(lr=hp.emb_lr, l2=hp.emb_l2, b1=b1, b2=b2, eps=eps)
     caps = _field_caps(cfg.vocab_sizes, capacity)
     vocab_of = {f"field_{i}": v for i, v in enumerate(cfg.vocab_sizes)}
+    alpha = admission_alpha(admission, half_life)
 
     def init(params):
         embed = params["embed"]
@@ -281,9 +330,14 @@ def make_hotcold_train_step(cfg: ctr.CTRConfig, hp, *, capacity: int = 4096,
             V, C = vocab_of[f], caps[f]
             uid_c, touched, hit, src = res[f]
 
-            # cumulative frequency is residency- and capacity-independent:
-            # it depends only on the batches seen (pad uids == V drop)
-            freq2 = hot["freq"][f].at[u.uids].add(u.counts, mode="drop")
+            # frequency is residency- and capacity-independent under both
+            # policies: cumulative just accumulates, decayed halves every
+            # half_life steps before adding — either way it depends only
+            # on the batches seen (pad uids == V drop)
+            fbase = hot["freq"][f]
+            if alpha is not None:
+                fbase = fbase * alpha
+            freq2 = fbase.at[u.uids].add(u.counts, mode="drop")
             new_freq[f] = freq2
             hits_w = hits_w + jnp.sum(jnp.where(hit, u.counts, 0.0))
             total_w = total_w + jnp.sum(u.counts)
@@ -439,3 +493,103 @@ def make_hotcold_train_step(cfg: ctr.CTRConfig, hp, *, capacity: int = 4096,
     from ..core.builders import jit_step
 
     return jit_step(step_impl), init, flush
+
+
+def make_migrate_device_step(cfg: ctr.CTRConfig, hp, *, r: float = 1.0,
+                             zeta: float = 1e-5, dense_tx=None,
+                             clip: bool = True, b1: float = 0.9,
+                             b2: float = 0.999, eps: float = 1e-8):
+    """The device half of the async migration split (embed/migrate.py).
+
+    The synchronous step above resolves residency *on device*: it carries
+    the O(vocab) ``slot_of``/``freq`` maps and the full cold tables in its
+    carry, ranks admission with ``_top_c_mask``, and gathers/scatters the
+    cold tier inside the jit — all on the critical path. This step takes
+    every one of those decisions as a **fixed-shape input** computed by
+    the host-side ``MigrationPlanner`` one step ahead: per field,
+    ``hit``/``src``/``ls`` describe the assembly, ``miss_{w,m,v}`` are the
+    pre-gathered cold rows, and ``sel``/``wb`` are the bank-gather indices
+    for the new hot tier and the eviction output. What remains on device
+    is exactly the math whose values matter — assembly select, closed-form
+    catch-up, forward/backward, CowClip, coupled-L2 Adam, bank gathers —
+    in the *same op order* as the synchronous step, so the two produce
+    bitwise-identical rows (tests/test_coldstore.py).
+
+    Signature: ``step(dense_params, dense_opt, hot, t, batch, plan) ->
+    (dense_params, dense_opt, hot, evict, aux)`` with ``hot`` =
+    ``{"w"|"m"|"v": {group: {field: [C, d]}}}`` (no ls, no maps — those
+    are host state now) and ``evict`` the raw ``[U, d]`` eviction banks
+    the planner's store-buffer is waiting to fill.
+    """
+    from ..train import metrics
+
+    if dense_tx is None:
+        dense_tx = optim_lib.adam(hp.dense_lr, l2=hp.dense_l2)
+    adam_kw = dict(lr=hp.emb_lr, l2=hp.emb_l2, b1=b1, b2=b2, eps=eps)
+
+    def loss_fn(rows, dense_params, uniq, dense_feats, labels):
+        logits = ctr.apply_rows(rows, dense_params, cfg, uniq, dense_feats)
+        return metrics.logloss(logits, labels)
+
+    def step_impl(dense_params, dense_opt, hot, t, batch, plan):
+        # the on-device dedup is O(batch) and must agree with the
+        # planner's host replica (np.unique and jnp.unique(size=...) both
+        # emit sorted-ascending uids padded with vocab)
+        uniq = ctr.unique_batch(cfg, batch["ids"])
+        groups = list(hot["w"].keys())
+
+        w_rows, m_rows, v_rows = ({g: {} for g in groups} for _ in range(3))
+        with jax.named_scope("migrate_assemble_catchup"):
+            for f, u in uniq.items():
+                hit = plan["hit"][f]
+                src = plan["src"][f]
+                ls = plan["ls"][f]
+                h2 = hit[:, None]
+                for g in groups:
+                    w = jnp.where(h2, hot["w"][g][f][src],
+                                  plan["miss_w"][g][f])
+                    m = jnp.where(h2, hot["m"][g][f][src],
+                                  plan["miss_m"][g][f])
+                    v = jnp.where(h2, hot["v"][g][f][src],
+                                  plan["miss_v"][g][f])
+                    (w_rows[g][f], m_rows[g][f],
+                     v_rows[g][f]) = optim_lib.decay_catchup_rows(
+                        w.astype(jnp.float32), m, v, ls, t - 1, **adam_kw)
+
+        loss, (g_rows, g_dense) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(
+            w_rows, dense_params, uniq, batch["dense"], batch["labels"])
+
+        new_hot = {k: {g: {} for g in groups} for k in ("w", "m", "v")}
+        evict = {k: {g: {} for g in groups} for k in ("w", "m", "v")}
+        for f, u in uniq.items():
+            sel_c = plan["sel"][f]
+            wb_c = plan["wb"][f]
+            for g in groups:
+                w_r = w_rows[g][f]
+                g32 = g_rows[g][f].astype(jnp.float32)
+                if clip:
+                    g32 = cowclip_rows(g32, w_r, u.counts, r=r, zeta=zeta)
+                w_n, m_n, v_n = optim_lib.sparse_adam_rows(
+                    g32, w_r, m_rows[g][f], v_rows[g][f], t, **adam_kw)
+
+                # same candidate bank as the synchronous step: raw
+                # resident rows first, freshly updated touched rows second
+                hw = hot["w"][g][f]
+                bank_w = jnp.concatenate([hw, w_n.astype(hw.dtype)])
+                bank_m = jnp.concatenate([hot["m"][g][f], m_n])
+                bank_v = jnp.concatenate([hot["v"][g][f], v_n])
+                new_hot["w"][g][f] = bank_w[sel_c]
+                new_hot["m"][g][f] = bank_m[sel_c]
+                new_hot["v"][g][f] = bank_v[sel_c]
+                evict["w"][g][f] = bank_w[wb_c]
+                evict["m"][g][f] = bank_m[wb_c]
+                evict["v"][g][f] = bank_v[wb_c]
+
+        d_updates, d_state = dense_tx.update(g_dense, dense_opt,
+                                             dense_params)
+        new_dense = jax.tree.map(
+            lambda p, u_: p + u_.astype(p.dtype), dense_params, d_updates)
+        return new_dense, d_state, new_hot, evict, {"loss": loss}
+
+    return jax.jit(step_impl, donate_argnums=(0, 1, 2))

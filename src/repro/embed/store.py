@@ -87,11 +87,26 @@ class EmbeddingStore:
     mesh: Any = None              # sharded only; None -> all local devices
     partition: str = "div"        # sharded only: "div" | "mod" row mapping
     hot_capacity: int = 4096      # hotcold only: hot rows per field
+    cold_store: str = "none"      # hotcold only: "none" (in-step jax cold
+                                  # tier) | "mem" | "mmap" (out-of-core
+                                  # ColdStore + async migration planner)
+    cold_dir: Optional[str] = None  # hotcold/mmap only: table directory
+    admission: str = "cumulative"   # hotcold only: "cumulative" | "decayed"
+    half_life: int = 0              # hotcold/decayed only: steps per halving
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {self.placement!r}; "
                              f"expected one of {PLACEMENTS}")
+        if self.cold_store not in ("none", "mem", "mmap"):
+            raise ValueError(f"unknown cold_store {self.cold_store!r}; "
+                             "expected 'none', 'mem', or 'mmap'")
+        if self.cold_store != "none" and self.placement != "hotcold":
+            raise ValueError("cold_store applies to the hotcold placement "
+                             f"only (placement={self.placement!r})")
+        if self.cold_store == "mmap" and not self.cold_dir:
+            raise ValueError("cold_store='mmap' needs cold_dir "
+                             "(the on-disk table directory)")
 
     def describe(self) -> str:
         if self.placement in ("sharded", "sharded_sparse"):
@@ -105,8 +120,14 @@ class EmbeddingStore:
         if self.placement == "dense":
             return f"dense({self.kernel})"
         if self.placement == "hotcold":
+            adm = (f"{self.admission}(half_life={self.half_life})"
+                   if self.admission == "decayed" else self.admission)
+            if self.cold_store != "none":
+                return (f"hotcold({self.hot_capacity} hot rows/field, "
+                        f"{adm} admission, async {self.cold_store} cold "
+                        f"store)")
             return (f"hotcold({self.hot_capacity} hot rows/field, "
-                    f"freq-ranked admission, cold host tier)")
+                    f"{adm} freq-ranked admission, cold host tier)")
         return self.placement
 
     def make_bundle(
@@ -163,12 +184,24 @@ class EmbeddingStore:
                                    scan_step=step.scan_step)
 
         if self.placement == "hotcold":
+            if self.cold_store != "none":
+                from . import migrate as migrate_lib
+
+                return migrate_lib.make_async_hotcold_bundle(
+                    cfg, hp, backend=self.cold_store,
+                    directory=self.cold_dir, capacity=self.hot_capacity,
+                    admission=self.admission, half_life=self.half_life,
+                    r=r, zeta=zeta, dense_tx=dense_tx,
+                    clip=clip_kind == "adaptive_column", b1=b1, b2=b2,
+                    eps=eps)
+
             from . import hotcold as hotcold_lib
 
             step, init, flush = hotcold_lib.make_hotcold_train_step(
                 cfg, hp, capacity=self.hot_capacity, r=r, zeta=zeta,
                 dense_tx=dense_tx, use_kernel=use_kernel,
-                clip=clip_kind == "adaptive_column", b1=b1, b2=b2, eps=eps)
+                clip=clip_kind == "adaptive_column", b1=b1, b2=b2, eps=eps,
+                admission=self.admission, half_life=self.half_life)
             return TrainStepBundle(step, init, flush,
                                    scan_step=step.scan_step)
 
@@ -245,6 +278,10 @@ def store_for(
     mesh: Any = None,
     partition: str = "div",
     hot_capacity: int = 4096,
+    cold_store: str = "none",
+    cold_dir: Optional[str] = None,
+    admission: str = "cumulative",
+    half_life: int = 0,
 ) -> EmbeddingStore:
     """The store for a config: routes legacy path names and the config's
     ``placement``/``sparse`` knobs onto one of the placements."""
@@ -255,4 +292,6 @@ def store_for(
         # route here so the bundle carries the sparse flush
         placement, kernel = "sparse", "auto"
     return EmbeddingStore(placement=placement, kernel=kernel, mesh=mesh,
-                          partition=partition, hot_capacity=hot_capacity)
+                          partition=partition, hot_capacity=hot_capacity,
+                          cold_store=cold_store, cold_dir=cold_dir,
+                          admission=admission, half_life=half_life)

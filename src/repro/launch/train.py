@@ -83,6 +83,18 @@ def run_ctr(args) -> None:
     if args.mode == "stream" and args.steps is None:
         raise SystemExit("[train] --mode stream has no epoch boundary; pass "
                          "--steps to bound the run")
+    if args.cold_store != "none":
+        if placement != "hotcold":
+            raise SystemExit("[train] --cold-store needs --placement hotcold "
+                             "(the out-of-core tier backs the hot/cold "
+                             "placement)")
+        if args.mode != "stream":
+            raise SystemExit("[train] --cold-store trains online only; add "
+                             "--mode stream (the migration planner runs on "
+                             "the stream's worker thread)")
+        if args.cold_store == "mmap" and not args.cold_dir:
+            raise SystemExit("[train] --cold-store mmap needs --cold-dir "
+                             "(the on-disk table directory)")
     cfg = ctr_lib.CTRConfig(
         name=args.model, vocab_sizes=ds.vocab_sizes,
         n_dense=ds.dense.shape[1], emb_dim=args.emb_dim,
@@ -98,7 +110,9 @@ def run_ctr(args) -> None:
             jax.eval_shape(lambda: ctr_lib.init(jax.random.key(0), cfg)))
     )
     store = store_for(cfg, mesh=mesh, partition=args.partition,
-                      hot_capacity=args.hot_capacity)
+                      hot_capacity=args.hot_capacity,
+                      cold_store=args.cold_store, cold_dir=args.cold_dir,
+                      admission=args.admission, half_life=args.half_life)
     engine_desc = (f"scan x{args.scan_steps}" if args.engine == "scan"
                    else "eager")
     mode_desc = ("stream (online, no epochs)" if args.mode == "stream"
@@ -139,9 +153,19 @@ def run_ctr(args) -> None:
 
         events = stream_lib.synthetic_event_stream(
             tr, rows_per_event=max(1, args.batch // 2), seed=args.seed)
-        stream = stream_lib.stream_chunks(
-            events, args.batch,
-            args.scan_steps if args.engine == "scan" else 1)
+        make_transform = getattr(bundle, "stream_transform", None)
+        if make_transform is not None:
+            # async cold store: chunks of 1 step, planned on the worker
+            # thread one lookahead window (buffer_size) ahead of the
+            # device; the transform carries the step budget so no planned
+            # step is ever dropped
+            stream = stream_lib.stream_chunks(
+                events, args.batch, 1, buffer_size=4,
+                transform=make_transform(max_steps=args.steps))
+        else:
+            stream = stream_lib.stream_chunks(
+                events, args.batch,
+                args.scan_steps if args.engine == "scan" else 1)
     with trace_ctx:
         res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
                         epochs=args.epochs, seed=args.seed, log_fn=print,
@@ -270,6 +294,27 @@ def main():
     ap.add_argument("--hot-capacity", type=int, default=4096,
                     help="hotcold placement: device-resident hot rows per "
                          "field (admission by cumulative id frequency)")
+    ap.add_argument("--cold-store", default="none",
+                    choices=("none", "mem", "mmap"),
+                    help="hotcold placement: move the cold tier out of the "
+                         "jitted step into a host ColdStore ('mem') or an "
+                         "np.memmap directory ('mmap', vocab bounded by "
+                         "disk); migration plans on the stream worker "
+                         "thread, overlapped with the device step "
+                         "(docs/streaming.md). Requires --mode stream")
+    ap.add_argument("--cold-dir", default=None, metavar="DIR",
+                    help="--cold-store mmap: directory holding the on-disk "
+                         "tables (created/reopened; flush/reopen/resume is "
+                         "bit-exact)")
+    ap.add_argument("--admission", default="cumulative",
+                    choices=("cumulative", "decayed"),
+                    help="hotcold admission frequency: 'cumulative' sums "
+                         "batch counts forever; 'decayed' halves the score "
+                         "every --half-life steps (recency-weighted working "
+                         "set)")
+    ap.add_argument("--half-life", type=int, default=0,
+                    help="--admission decayed: steps for an id's frequency "
+                         "score to halve (must be > 0)")
     ap.add_argument("--sparse", action="store_true",
                     help="DEPRECATED alias for --placement sparse; errors "
                          "if --placement names anything else")

@@ -803,14 +803,41 @@ def train_ctr(
         step_fn = make_train_step(cfg, tx)
         flush = None
     eval_fn = make_eval_fn(cfg)
+    driver = getattr(step_bundle, "stream_driver", None)
     runner = None
     if engine == "scan":
-        runner = engine_lib.make_chunk_runner(
-            engine_lib.resolve_scan_step(step_bundle, step_fn))
+        if driver is not None and mode != "stream":
+            raise ValueError(
+                "this bundle drives its own host-side consume loop "
+                "(stream_driver); it supports mode='stream' only")
+        if driver is None:
+            runner = engine_lib.make_chunk_runner(
+                engine_lib.resolve_scan_step(step_bundle, step_fn))
 
     history = []
     n_steps = 0
     t0 = time.perf_counter()
+
+    if mode == "stream" and driver is not None:
+        try:
+            params, opt_state, n_steps, sstats = driver(
+                params, opt_state, stream, max_steps=max_steps)
+        finally:
+            close = getattr(stream, "close", None)
+            if close is not None:
+                close()
+        seconds = time.perf_counter() - t0
+        if flush is not None:
+            params, opt_state = flush(params, opt_state)
+        final = eval_fn(params, test_ds) if test_ds is not None else {}
+        if log_fn:
+            log_fn(f"stream: {n_steps} steps, migration overlap "
+                   f"{sstats.get('migration_overlap_fraction', 0.0):.2f}"
+                   + (f", auc={final['auc']:.4f} "
+                      f"logloss={final['logloss']:.4f}" if final else ""))
+        return TrainResult(history=history, final_eval=dict(final),
+                           seconds=seconds, steps=n_steps, params=params,
+                           opt_state=opt_state)
 
     if mode == "stream":
         try:

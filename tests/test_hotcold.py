@@ -33,7 +33,8 @@ except ImportError:
 
 from repro.core import build_train_step, scale_hyperparams
 from repro.data.synthetic import make_ctr_dataset, iterate_batches
-from repro.embed.hotcold import hot_tier_bytes, resident_ids
+from repro.embed.hotcold import (hot_tier_bytes, resident_ids,
+                                 residency_map_bytes)
 from repro.embed.store import max_pending_depth
 from repro.models import ctr
 
@@ -66,12 +67,13 @@ def _batches(seed):
 
 
 @functools.lru_cache(maxsize=None)
-def _run(path, capacity=0, seed=1):
+def _run(path, capacity=0, seed=1, admission="cumulative", half_life=0):
     """Train STEPS steps; returns (exported params leaves as a dict keyed
     by path string, final state, per-step aux dicts)."""
     import jax.numpy as jnp
 
-    kw = {"hot_capacity": capacity} if path == "hotcold" else {}
+    kw = ({"hot_capacity": capacity, "admission": admission,
+           "half_life": half_life} if path == "hotcold" else {})
     bundle = build_train_step(_cfg(), _hp(), path=path, use_kernel=False,
                               **kw)
     params = bundle.prepare(ctr.init(jax.random.key(0), _cfg()))
@@ -119,12 +121,17 @@ def test_no_row_lost_or_double_resident(capacity, seed):
                                       np.sort(res))
 
 
-def test_frequencies_are_capacity_independent():
-    """Cumulative id frequencies depend only on the batches seen — the
-    residency-independence that makes the admission ranking a global total
-    order."""
-    _, st_small, _, _ = _run("hotcold", 2)
-    _, st_big, _, _ = _run("hotcold", 100)
+@pytest.mark.parametrize("admission,half_life",
+                         [("cumulative", 0), ("decayed", 3)])
+def test_frequencies_are_capacity_independent(admission, half_life):
+    """Id frequencies depend only on the batches seen — the residency-
+    independence that makes the admission ranking a global total order.
+    Holds for both policies: the decayed score's per-step multiply touches
+    every id identically, so it never couples frequency to residency."""
+    _, st_small, _, _ = _run("hotcold", 2, admission=admission,
+                             half_life=half_life)
+    _, st_big, _, _ = _run("hotcold", 100, admission=admission,
+                           half_life=half_life)
     for f in ("field_0", "field_1", "field_2"):
         np.testing.assert_array_equal(
             np.asarray(st_small["hot"]["freq"][f]),
@@ -149,6 +156,27 @@ def test_capacity_runs_bitwise_identical(capacity):
     for k in leaves_small:
         np.testing.assert_array_equal(leaves_small[k], leaves_big[k],
                                       err_msg=k)
+
+
+def test_decayed_admission_capacity_runs_bitwise_identical():
+    """Capacity independence is a property of the *policy shape* (rank a
+    residency-independent score), not of the cumulative policy: the
+    decayed score inherits it unchanged."""
+    leaves_small, _, _, _ = _run("hotcold", 2, admission="decayed",
+                                 half_life=3)
+    leaves_big, _, _, _ = _run("hotcold", 100, admission="decayed",
+                               half_life=3)
+    for k in leaves_small:
+        np.testing.assert_array_equal(leaves_small[k], leaves_big[k],
+                                      err_msg=k)
+    # the policy is real: it admits a different working set than
+    # cumulative on the same stream (frequencies diverge)
+    _, st_cum, _, _ = _run("hotcold", 2)
+    _, st_dec, _, _ = _run("hotcold", 2, admission="decayed", half_life=3)
+    assert any(
+        not np.array_equal(np.asarray(st_cum["hot"]["freq"][f]),
+                           np.asarray(st_dec["hot"]["freq"][f]))
+        for f in ("field_0", "field_1", "field_2"))
 
 
 def test_capacity_one_within_rounding():
@@ -228,9 +256,21 @@ def test_hot_tier_bytes_scale_with_capacity_not_vocab():
     _, st_big, _, _ = _run("hotcold", 100)
     small, big = hot_tier_bytes(st_small), hot_tier_bytes(st_big)
     assert small < big
-    # the capacity-dependent part (hot rows) shrinks with C; the
-    # vocab-sized maps (slot_of, freq) are shared overhead
+    # hot_tier_bytes counts only the O(capacity) working set now
     table_bytes = sum(
         v.size * v.dtype.itemsize for v in jax.tree.leaves(
             ctr.init(jax.random.key(0), _cfg())["embed"]))
     assert small < table_bytes
+
+
+def test_residency_map_bytes_reported_separately():
+    """The O(vocab) slot_of/freq maps are bookkeeping, not working set:
+    hot_tier_bytes excludes them (it must scale with capacity only) and
+    residency_map_bytes reports them apart — identical across capacities,
+    because both maps are vocab-sized."""
+    _, st_small, _, _ = _run("hotcold", 2)
+    _, st_big, _, _ = _run("hotcold", 100)
+    rm_small = residency_map_bytes(st_small)
+    assert rm_small == residency_map_bytes(st_big) > 0
+    # exact accounting: slot_of (int32 per vocab) + freq (f32 per vocab)
+    assert rm_small == 2 * 4 * sum(VOCABS)
