@@ -1202,6 +1202,127 @@ def _big_vocab_mmap_record(batch: int, hot_capacity: int,
         shutil.rmtree(d, ignore_errors=True)
 
 
+def durability_bench(
+    out_path: str = "BENCH_durability.json",
+    fast: bool = False,
+) -> list:
+    """Snapshot overhead and resume latency for crash-safe streaming
+    training, emitted to ``BENCH_durability.json``.
+
+    The robustness question (docs/robustness.md): what does it cost to
+    keep a streaming trainer restartable? A sparse-placement deepfm runs
+    interleaved 50-step timed windows — the ``baseline`` window is pure
+    train steps, the ``snapshot`` window additionally flushes and
+    publishes one crash-safe snapshot (``train/snapshot.py``: settle
+    lazy decay, export, fsync'd write-temp-rename with checksummed
+    manifest) at the window boundary, i.e. a ``--snapshot-every 50``
+    cadence. Min-over-reps per window for the same reason as
+    streaming_bench: contention only inflates.
+
+    Reported:
+
+    * ``snapshot_over_baseline_rows_per_sec`` — throughput with the
+      snapshot stall amortized over its window, as a fraction of the
+      no-snapshot window. Gated >= 0.9 by scripts/bench_guard.py
+      ("snapshot-every-50 costs <= 10% rows/sec").
+    * ``snapshot_stall_fraction`` — the capture wall-time (flush +
+      export + durable publish) over the snapshot window.
+    * ``resume_seconds`` — wall-clock for ``snapshot.resume`` to turn
+      the latest valid on-disk snapshot back into a live
+      ``(params, state)`` pair.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import build_train_step
+    from repro.models import ctr as ctr_lib
+    from repro.train import snapshot as snapshot_lib
+
+    vocab = 20_000
+    batch = 4096           # cadence-50 amortization assumes a large-batch
+    window = 50            # regime (the paper's); steps per timed window
+    reps = 2 if fast else 3
+
+    cfg, hp, batch_data = _sharded_bench_case(vocab, batch)
+    params0 = ctr_lib.init(jax.random.key(0), cfg)
+    bundle = build_train_step(cfg, hp, path="sparse", warmup_steps=0)
+    token = "sparse:bench"
+
+    def fresh():
+        params = bundle.prepare(jax.tree.map(jnp.copy, params0))
+        state = bundle.init(params)
+        # compile + warm outside any timed window
+        params, state, _ = bundle.step(params, state, dict(batch_data))
+        jax.block_until_ready(jax.tree.leaves(params))
+        return params, state
+
+    snap_dir = tempfile.mkdtemp(prefix="bench_snap_")
+    try:
+        mgr = snapshot_lib.SnapshotManager(snap_dir, retain=2)
+        runs = {"baseline": {"sec": float("inf")},
+                "snapshot": {"sec": float("inf"), "stall": float("inf")}}
+        step_no = 0
+        for _ in range(reps):
+            for mode, r in runs.items():
+                params, state = fresh()
+                t0 = time.perf_counter()
+                for _ in range(window):
+                    params, state, _ = bundle.step(
+                        params, state, dict(batch_data))
+                jax.block_until_ready(jax.tree.leaves(params))
+                if mode == "snapshot":
+                    step_no += window
+                    s0 = time.perf_counter()
+                    params, state = snapshot_lib.capture(
+                        mgr, bundle, params, state, step=step_no,
+                        cursor={"rows_consumed": step_no * batch},
+                        meta={"placement": token})
+                    r["stall"] = min(r["stall"],
+                                     time.perf_counter() - s0)
+                r["sec"] = min(r["sec"], time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        restored = snapshot_lib.resume(
+            mgr, bundle, ctr_lib.init(jax.random.key(0), cfg), token=token)
+        assert restored is not None
+        jax.block_until_ready(jax.tree.leaves(restored[0]))
+        resume_seconds = time.perf_counter() - t0
+
+        base_rps = window * batch / runs["baseline"]["sec"]
+        snap_rps = window * batch / runs["snapshot"]["sec"]
+        stall = runs["snapshot"]["stall"]
+        summary = {
+            "snapshot_over_baseline_rows_per_sec": snap_rps / base_rps,
+            "snapshot_stall_fraction": stall / runs["snapshot"]["sec"],
+            "resume_seconds": resume_seconds,
+        }
+        records = [
+            {"mode": "baseline", "rows_per_sec": base_rps,
+             "window_seconds": runs["baseline"]["sec"]},
+            {"mode": f"snapshot_every_{window}", "rows_per_sec": snap_rps,
+             "window_seconds": runs["snapshot"]["sec"],
+             "snapshot_stall_seconds": stall},
+        ]
+        with open(out_path, "w") as f:
+            json.dump({"durability": True, "vocab": vocab, "batch": batch,
+                       "window_steps": window, "reps": reps,
+                       "summary": summary, "records": records}, f, indent=2)
+        print(f"[durability_bench] snapshot-every-{window} throughput "
+              f"{summary['snapshot_over_baseline_rows_per_sec']:.3f}x "
+              f"baseline (stall {stall * 1e3:.0f} ms/"
+              f"{summary['snapshot_stall_fraction']:.1%} of window), "
+              f"resume {resume_seconds:.2f} s -> {out_path}")
+        rows = [_csv(f"durability/{rec['mode']}",
+                     1e6 * rec["window_seconds"] / window,
+                     f"{rec['rows_per_sec']:.0f} rows/s")
+                for rec in records]
+        rows.append(_csv("durability/resume", 1e6 * resume_seconds,
+                         f"step {restored[2]}"))
+        return rows
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -1224,7 +1345,18 @@ def main() -> None:
                     help="run only the streaming-placement grid "
                          "(dense / sparse / hotcold rows-per-sec and "
                          "device-resident bytes at vocab 1M)")
+    ap.add_argument("--durability-bench", action="store_true",
+                    help="run only the crash-safety cost grid "
+                         "(snapshot-every-50 throughput vs baseline, "
+                         "snapshot stall fraction, resume latency)")
     args = ap.parse_args()
+
+    if args.durability_bench:
+        rows = durability_bench(fast=args.fast)
+        print("\nname,us_per_call,derived")
+        for row in rows:
+            print(row)
+        return
 
     if args.stream_bench:
         rows = streaming_bench(fast=args.fast)

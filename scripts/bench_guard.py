@@ -1,8 +1,8 @@
 #!/usr/bin/env python
-"""Bench-regression guard: hybrid embedding step, serving replay, streaming.
+"""Bench-regression guard: hybrid step, serving replay, streaming, durability.
 
 Compares a freshly generated bench JSON against the committed baseline and
-fails (exit 1) on a relative regression beyond ``--tolerance``. Three file
+fails (exit 1) on a relative regression beyond ``--tolerance``. Four file
 kinds, auto-detected from the records:
 
 * **hybrid** (``BENCH_sharded_sparse.json``): for every vocab present in
@@ -17,6 +17,13 @@ kinds, auto-detected from the records:
   baseline ratio by more than the tolerance, plus two hard acceptance
   floors on the fresh file alone: hotcold throughput >= 0.7x sparse and
   hotcold device-resident bytes <= 0.25x dense.
+* **durability** (``BENCH_durability.json``, top-level ``"durability":
+  true``): the fresh ``snapshot / baseline`` rows-per-sec ratio must not
+  drop below the baseline file's ratio by more than the tolerance, plus
+  the hard acceptance floor: a snapshot-every-50 cadence costs <= 10%
+  throughput (ratio >= 0.9). Stall fraction and resume latency are
+  printed for the CI log but not gated (absolute seconds are runner
+  noise).
 
 Both guards compare *ratios of paths measured back-to-back in the same
 process*, never absolute times: contention on a shared CI runner inflates
@@ -47,6 +54,11 @@ STREAM_BYTES_CEIL = 0.25
 # claim: training never pages the whole table in)
 ASYNC_SPEEDUP_FLOOR = 1.1
 MMAP_RSS_CEIL = 0.5
+
+# acceptance gate from the durability bench (ISSUE 10): taking a
+# crash-safe snapshot every 50 steps must cost <= 10% rows/sec against
+# the same window with no snapshots
+DURABILITY_ROWS_FLOOR = 0.9
 
 
 def _load(path):
@@ -80,6 +92,10 @@ def serving_ratios(d):
 
 def _is_serving(d):
     return any("path" in r for r in d.get("records", []))
+
+
+def _is_durability(d):
+    return bool(d.get("durability"))
 
 
 def _is_streaming(d):
@@ -180,6 +196,37 @@ def guard_streaming(base, fresh, tol):
     return 1 if failed else 0
 
 
+def guard_durability(base, fresh, tol):
+    base_s, fresh_s = base.get("summary", {}), fresh.get("summary", {})
+    key = "snapshot_over_baseline_rows_per_sec"
+    fr = fresh_s.get(key)
+    if fr is None:
+        print("bench_guard: fresh durability file has no summary ratio",
+              file=sys.stderr)
+        return 1
+    failed = False
+    br = base_s.get(key)
+    if br is None:
+        print(f"{key}: fresh {fr:.3f}x (no baseline)")
+    else:
+        floor = br * (1.0 - tol)
+        status = "ok" if fr >= floor else "REGRESSED"
+        print(f"{key}: {fr:.3f}x vs baseline {br:.3f}x "
+              f"(floor {floor:.3f}x) {status}")
+        if fr < floor:
+            failed = True
+    if fr < DURABILITY_ROWS_FLOOR:
+        print(f"{key}: {fr:.3f}x below the hard "
+              f"{DURABILITY_ROWS_FLOOR:.2f}x acceptance floor REGRESSED")
+        failed = True
+    for name in ("snapshot_stall_fraction", "resume_seconds"):
+        fv, bv = fresh_s.get(name), base_s.get(name)
+        if fv is not None:     # informational — absolute values are
+            extra = "" if bv is None else f" vs baseline {bv:.3f}"
+            print(f"{name}: {fv:.3f}{extra} (not gated)")
+    return 1 if failed else 0
+
+
 def guard_hybrid(base, fresh, tol):
     base_r, fresh_r = hybrid_ratios(base), hybrid_ratios(fresh)
     if not fresh_r:
@@ -249,6 +296,8 @@ def main():
     args = ap.parse_args()
 
     base, fresh = _load(args.baseline), _load(args.fresh)
+    if _is_durability(fresh):
+        return guard_durability(base, fresh, args.tolerance)
     if _is_streaming(fresh):
         return guard_streaming(base, fresh, args.tolerance)
     if _is_serving(fresh):

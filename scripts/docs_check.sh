@@ -14,6 +14,9 @@
 #   docs/streaming.md (repro.launch.train): --steps 2 --samples 4096
 #                                           --batch 256 --scan-steps 2
 #                                           --hot-capacity 64
+#   docs/robustness.md (repro.launch.train): --steps 4 --samples 4096
+#                                           --batch 256 --scan-steps 2
+#                                           --snapshot-every 2
 #
 # Wired into CI (.github/workflows/ci.yml). Run locally the same way:
 #   bash scripts/docs_check.sh
@@ -21,7 +24,8 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 for page in docs/architecture.md docs/cowclip.md docs/cli.md \
-            docs/benchmarks.md docs/serving.md docs/streaming.md; do
+            docs/benchmarks.md docs/serving.md docs/streaming.md \
+            docs/robustness.md; do
   [ -s "$page" ] || { echo "[docs-check] missing page: $page" >&2; exit 1; }
 done
 
@@ -62,8 +66,14 @@ if [ "${#stream_cmds[@]}" -eq 0 ]; then
   exit 1
 fi
 
+mapfile -t robust_cmds < <(extract_cmds docs/robustness.md 'repro\.launch\.train')
+if [ "${#robust_cmds[@]}" -eq 0 ]; then
+  echo "[docs-check] no runnable commands found in docs/robustness.md" >&2
+  exit 1
+fi
+
 echo "[docs-check] ${#train_cmds[@]} train + ${#serve_cmds[@]} serving" \
-  "+ ${#stream_cmds[@]} streaming commands"
+  "+ ${#stream_cmds[@]} streaming + ${#robust_cmds[@]} robustness commands"
 run_cmds "cli.md" "--steps 2 --samples 4096 --epochs 1 --batch 256" \
   "${train_cmds[@]}"
 run_cmds "serving.md" "--steps 3 --samples 4096 --requests 60 --clients 4" \
@@ -71,4 +81,7 @@ run_cmds "serving.md" "--steps 3 --samples 4096 --requests 60 --clients 4" \
 run_cmds "streaming.md" \
   "--steps 2 --samples 4096 --batch 256 --scan-steps 2 --hot-capacity 64" \
   "${stream_cmds[@]}"
+run_cmds "robustness.md" \
+  "--steps 4 --samples 4096 --batch 256 --scan-steps 2 --snapshot-every 2" \
+  "${robust_cmds[@]}"
 echo "[docs-check] all documented commands ran"

@@ -165,6 +165,36 @@ def jit_step(step_impl, jit_target=None) -> StepFn:
         step_impl)
 
 
+def nonfinite_guard(step_impl):
+    """Wrap a pure step body so a poisoned batch cannot destroy the model.
+
+    Runs the step, then selects per-leaf between the new and the old
+    (params, state) on one predicate: the batch loss is finite. A NaN/Inf
+    loss (upstream of every gradient) therefore skips the entire update —
+    params, optimizer moments, and the step counter stay exactly as if
+    the batch had never arrived, which keeps the lazy-decay placements'
+    ``last_step`` bookkeeping consistent. The skip is counted in
+    ``aux["skipped_steps"]`` (0 or 1 per step; sum over a scanned chunk).
+
+    Exactness: ``jnp.where(True, new, old)`` returns ``new`` bitwise, so
+    guarded and unguarded runs over clean data are identical. The guard
+    composes with ``lax.scan`` (pure, no host callbacks), so every
+    bundle's ``scan_step`` can be wrapped the same way.
+    """
+    import jax.numpy as jnp
+
+    def guarded(params, state, batch):
+        new_params, new_state, aux = step_impl(params, state, batch)
+        ok = jnp.isfinite(aux["loss"])
+        keep = lambda new, old: jax.tree.map(  # noqa: E731
+            lambda n, o: jnp.where(ok, n, o), new, old)
+        aux = dict(aux,
+                   skipped_steps=(~ok).astype(jnp.int32))
+        return keep(new_params, params), keep(new_state, state), aux
+
+    return guarded
+
+
 def identity_prepare(params):
     """Default param placement: leave the tree exactly as initialized."""
     return params

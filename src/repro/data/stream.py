@@ -22,6 +22,7 @@ because a stream re-opens sources repeatedly).
 
 from __future__ import annotations
 
+import logging
 import os
 import queue
 import threading
@@ -32,8 +33,49 @@ import numpy as np
 
 from .synthetic import CTRDataset, note_dropped_remainder
 
+logger = logging.getLogger(__name__)
+
 _DONE = object()
 _KEYS = ("ids", "dense", "labels")
+
+
+def skip_rows(events: Iterable[dict], n: int) -> Iterator[dict]:
+    """Drop the first ``n`` rows of an event stream (slicing the partial
+    event at the boundary) — the resume cursor for deterministic sources.
+
+    ``batches_from_events`` concatenates rows across event boundaries, so
+    the batch sequence after a skip depends only on the row sequence, not
+    on where the original event boundaries fell: replaying a
+    deterministic source and skipping ``steps * batch_size`` rows
+    reproduces the exact batches an uninterrupted run would have seen
+    from that step on (train/snapshot.py's stream cursor).
+    """
+    if n < 0:
+        raise ValueError(f"cannot skip {n} rows")
+    remaining = n
+    it = iter(events)
+    try:
+        for ev in it:
+            k = len(ev["labels"])
+            if remaining >= k:
+                remaining -= k
+                continue
+            if remaining:
+                ev = {key: np.asarray(ev[key])[remaining:] for key in _KEYS}
+                remaining = 0
+            yield ev
+            break
+        else:
+            return
+        for ev in it:
+            yield ev
+    finally:
+        close = getattr(events, "close", None)
+        if close is not None:
+            try:
+                close()
+            except Exception:
+                pass
 
 
 def batches_from_events(events: Iterable[dict], batch_size: int,
@@ -116,7 +158,8 @@ class ChunkStream:
 
     def __init__(self, events: Iterable[dict], batch_size: int,
                  scan_steps: int = 1, *, buffer_size: int = 2,
-                 transform: Optional[Callable] = None):
+                 transform: Optional[Callable] = None,
+                 start_rows: int = 0):
         self._q: queue.Queue = queue.Queue(maxsize=max(1, buffer_size))
         self._stop = threading.Event()
         self._failure: list = []
@@ -124,9 +167,26 @@ class ChunkStream:
         self._batch_size = batch_size
         self._scan_steps = scan_steps
         self._transform = transform
+        # stream cursor: rows staged into chunks so far, counted from
+        # ``start_rows`` (the resume offset of a replayed source). The
+        # consumer-side cursor a snapshot records is steps * batch_size —
+        # this worker-side count only ever runs *ahead* of it by the
+        # queue depth, and ``cursor()`` reports both so tests can assert
+        # the relationship.
+        self.start_rows = int(start_rows)
+        self.rows_staged = 0
         self._worker = threading.Thread(
             target=self._work, daemon=True, name="repro-stream")
         self._worker.start()
+
+    def cursor(self) -> dict:
+        """Worker-side stream position: rows staged into queued chunks
+        (counting from ``start_rows``) plus the chunk geometry a resume
+        needs to translate steps back into rows."""
+        return {"start_rows": self.start_rows,
+                "rows_staged": self.rows_staged,
+                "batch_size": self._batch_size,
+                "scan_steps": self._scan_steps}
 
     def _work(self):
         try:
@@ -138,6 +198,13 @@ class ChunkStream:
                     chunk = self._transform(chunk)
                     if chunk is None:
                         return
+                payload = getattr(chunk, "chunk", None)
+                if payload is None and isinstance(chunk, dict):
+                    payload = chunk
+                if payload is not None:
+                    self.rows_staged += int(
+                        payload["labels"].shape[0]
+                        * payload["labels"].shape[1])
                 while not self._stop.is_set():
                     try:
                         self._q.put(chunk, timeout=0.1)
@@ -195,13 +262,16 @@ class ChunkStream:
 
 def stream_chunks(events: Iterable[dict], batch_size: int,
                   scan_steps: int = 1, *, buffer_size: int = 2,
-                  transform: Optional[Callable] = None) -> ChunkStream:
+                  transform: Optional[Callable] = None,
+                  start_rows: int = 0) -> ChunkStream:
     """The composition ``train_ctr(mode="stream")`` consumes: events ->
     exact batches -> ``[k, batch, ...]`` chunks, staged ``buffer_size``
     deep on a worker thread. ``transform`` runs per chunk on the worker
-    (see ``ChunkStream``)."""
+    (see ``ChunkStream``); ``start_rows`` stamps the cursor origin of a
+    resumed (row-skipped) source."""
     return ChunkStream(events, batch_size, scan_steps,
-                       buffer_size=buffer_size, transform=transform)
+                       buffer_size=buffer_size, transform=transform,
+                       start_rows=start_rows)
 
 
 def synthetic_event_stream(ds: CTRDataset, *, events: Optional[int] = None,
@@ -229,7 +299,10 @@ def synthetic_event_stream(ds: CTRDataset, *, events: Optional[int] = None,
 def follow_tsv_events(path: str, vocab_sizes, n_dense: int, *,
                       rows_per_event: int = 256, poll_s: float = 0.05,
                       idle_timeout_s: Optional[float] = None,
-                      stop: Optional[Callable[[], bool]] = None
+                      stop: Optional[Callable[[], bool]] = None,
+                      start_offset: int = 0,
+                      cursor: Optional[dict] = None,
+                      quarantine_path: Optional[str] = None
                       ) -> Iterator[dict]:
     """Tail a growing TSV of ``label <tab> dense... <tab> ids...`` rows.
 
@@ -239,10 +312,70 @@ def follow_tsv_events(path: str, vocab_sizes, n_dense: int, *,
     arrive for ``idle_timeout_s`` (None tails forever); a final short
     event flushes whatever is pending. This is the file-tail flavor of
     the stream contract — same event dicts as ``synthetic_event_stream``.
+
+    Malformed lines — wrong field count, cells that do not parse as
+    numbers, non-integer ids, ids outside ``[0, vocab)`` — never crash
+    the stream worker: each is appended verbatim to a quarantine side
+    file (``quarantine_path``, default ``path + ".quarantine"``), counted
+    in ``cursor["rows_quarantined"]``, and warned about once per
+    malformation shape (field count x reason) so a burst of identical
+    garbage logs one line, not a million.
+
+    ``start_offset`` seeks before the first read (resume from a byte
+    cursor); ``cursor`` — a caller-owned dict — is kept updated with
+    ``offset`` (byte position after the last *consumed* line),
+    ``rows_emitted`` and ``rows_quarantined``, so a snapshot can record
+    exactly where in the file training had read to.
     """
     n_fields = len(vocab_sizes)
+    vocab = [int(v) for v in vocab_sizes]
+    n_cells = 1 + n_dense + n_fields
     pend: list = []
     idle = 0.0
+    if cursor is None:
+        cursor = {}
+    cursor.setdefault("offset", int(start_offset))
+    cursor.setdefault("rows_emitted", 0)
+    cursor.setdefault("rows_quarantined", 0)
+    warned_shapes: set = set()
+    qfile = [None]
+    qpath = quarantine_path or (path + ".quarantine")
+
+    def quarantine(line: str, reason: str, shape):
+        cursor["rows_quarantined"] += 1
+        if qfile[0] is None:
+            qfile[0] = open(qpath, "a")
+        qfile[0].write(line + "\n")
+        qfile[0].flush()
+        if shape not in warned_shapes:
+            warned_shapes.add(shape)
+            logger.warning(
+                "[stream] quarantined malformed TSV row (%s); further "
+                "rows of this shape go to %s silently", reason, qpath)
+
+    def parse(line: str):
+        cells = line.split("\t")
+        if len(cells) != n_cells:
+            quarantine(line, f"{len(cells)} fields, expected {n_cells}",
+                       ("nfields", len(cells)))
+            return None
+        try:
+            head = [float(x) for x in cells[:1 + n_dense]]
+        except ValueError:
+            quarantine(line, "non-numeric label/dense cell",
+                       ("float", n_cells))
+            return None
+        try:
+            ids = [int(x) for x in cells[1 + n_dense:]]
+        except ValueError:
+            quarantine(line, "non-integer id cell", ("int", n_cells))
+            return None
+        for i, x in enumerate(ids):
+            if not 0 <= x < vocab[i]:
+                quarantine(line, f"id {x} outside [0, {vocab[i]}) for "
+                           f"field {i}", ("range", i))
+                return None
+        return head + ids
 
     def flush():
         rows = np.asarray(pend, np.float64)
@@ -252,33 +385,44 @@ def follow_tsv_events(path: str, vocab_sizes, n_dense: int, *,
             "ids": rows[:, 1 + n_dense:1 + n_dense + n_fields].astype(
                 np.int32),
         }
+        cursor["rows_emitted"] += len(pend)
         pend.clear()
         return ev
 
-    with open(path) as f:
-        carry = ""
-        while True:
-            if stop is not None and stop():
-                break
-            data = f.read()
-            if not data:
-                if idle_timeout_s is not None:
-                    idle += poll_s
-                    if idle >= idle_timeout_s:
-                        break
-                time.sleep(poll_s)
-                continue
-            idle = 0.0
-            lines = (carry + data).split("\n")
-            carry = lines.pop()          # possibly incomplete last line
-            for line in lines:
-                if not line.strip():
+    try:
+        with open(path) as f:
+            if start_offset:
+                f.seek(start_offset)
+            carry = ""
+            while True:
+                if stop is not None and stop():
+                    break
+                data = f.read()
+                if not data:
+                    if idle_timeout_s is not None:
+                        idle += poll_s
+                        if idle >= idle_timeout_s:
+                            break
+                    time.sleep(poll_s)
                     continue
-                pend.append([float(x) for x in line.split("\t")])
-                if len(pend) >= rows_per_event:
-                    yield flush()
-        if pend:
-            yield flush()
+                idle = 0.0
+                lines = (carry + data).split("\n")
+                carry = lines.pop()      # possibly incomplete last line
+                for line in lines:
+                    cursor["offset"] += len(line.encode()) + 1
+                    if not line.strip():
+                        continue
+                    row = parse(line)
+                    if row is None:
+                        continue
+                    pend.append(row)
+                    if len(pend) >= rows_per_event:
+                        yield flush()
+            if pend:
+                yield flush()
+    finally:
+        if qfile[0] is not None:
+            qfile[0].close()
 
 
 def write_tsv_rows(path: str, ds: CTRDataset, start: int, stop: int):

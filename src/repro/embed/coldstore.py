@@ -43,11 +43,17 @@ records it).
 from __future__ import annotations
 
 import json
+import logging
 import os
 import threading
-from typing import Dict, Iterable, Optional
+import time
+from typing import Callable, Dict, Iterable, Optional
 
 import numpy as np
+
+from ..core import durable
+
+logger = logging.getLogger(__name__)
 
 __all__ = ["ColdStore", "StoreBuffer", "EvictionHandle", "COLD_BACKENDS"]
 
@@ -88,6 +94,41 @@ class ColdStore:
         self.resumed = False     # reattached to an existing directory
         self.gather_bytes = 0
         self.scatter_bytes = 0
+        # transient-I/O retry policy: every row-traffic entry point
+        # (gather/scatter/flush_files) retries an OSError up to
+        # ``io_retries`` times with exponential backoff starting at
+        # ``io_backoff`` seconds. The operations are idempotent (pure
+        # reads / full-row overwrites), so a retry after a partial
+        # failure rewrites the same values. ``fault_hook`` is the
+        # deterministic injection point (repro.testing.faults): called
+        # with the op name at the top of each attempt; raising OSError
+        # there exercises the exact retry path production I/O errors
+        # would take.
+        self.io_retries = 3
+        self.io_backoff = 0.01
+        self.faults_retried = 0
+        self.fault_hook: Optional[Callable[[str], None]] = None
+
+    def _io(self, op: str, fn: Callable):
+        """Run one idempotent I/O operation under the bounded-retry /
+        exponential-backoff policy; re-raise after ``io_retries``
+        failed retries."""
+        delay = self.io_backoff
+        for attempt in range(self.io_retries + 1):
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(op)
+                return fn()
+            except OSError as e:
+                if attempt == self.io_retries:
+                    raise
+                self.faults_retried += 1
+                logger.warning(
+                    "[coldstore] transient %s error (%s); retry %d/%d "
+                    "after %.3fs", op, e, attempt + 1, self.io_retries,
+                    delay)
+                time.sleep(delay)
+                delay *= 2
 
     # -- construction -------------------------------------------------------
 
@@ -120,8 +161,12 @@ class ColdStore:
         store.vocab = {f: int(first[f][0]) for f in store.fields}
         if backend == "mmap":
             os.makedirs(directory, exist_ok=True)
-            with open(os.path.join(directory, _META), "w") as fp:
-                json.dump({"version": 1, "spec": spec}, fp)
+            # atomic + fsync'd: ``open`` keys resumability off this file,
+            # so a crash mid-create must leave either no meta.json or a
+            # complete one — never a torn prefix
+            durable.atomic_write_bytes(
+                os.path.join(directory, _META),
+                json.dumps({"version": 1, "spec": spec}).encode())
         for g in store.groups:
             store.w[g], store.m[g], store.v[g] = {}, {}, {}
             for f, (vocab, dim, dtype) in spec[g].items():
@@ -193,31 +238,45 @@ class ColdStore:
 
     def gather(self, f: str, ids: np.ndarray) -> dict:
         """Rows ``{"w"|"m"|"v": {group: [n, d]}, "ls": [n]}`` for one
-        field's ids (host fancy-indexing; mmap pages fault in on demand)."""
+        field's ids (host fancy-indexing; mmap pages fault in on demand).
+        Retries transient OSErrors (a faulted-in page can fail on a
+        flaky disk) under the bounded-backoff policy."""
         ids = np.asarray(ids, np.int64)
-        out = {"w": {}, "m": {}, "v": {},
-               "ls": np.asarray(self.ls[f][ids])}
-        nbytes = out["ls"].nbytes
-        for g in self.groups:
-            out["w"][g] = np.asarray(self.w[g][f][ids])
-            out["m"][g] = np.asarray(self.m[g][f][ids])
-            out["v"][g] = np.asarray(self.v[g][f][ids])
-            nbytes += (out["w"][g].nbytes + out["m"][g].nbytes
-                       + out["v"][g].nbytes)
+
+        def read():
+            out = {"w": {}, "m": {}, "v": {},
+                   "ls": np.asarray(self.ls[f][ids])}
+            nbytes = out["ls"].nbytes
+            for g in self.groups:
+                out["w"][g] = np.asarray(self.w[g][f][ids])
+                out["m"][g] = np.asarray(self.m[g][f][ids])
+                out["v"][g] = np.asarray(self.v[g][f][ids])
+                nbytes += (out["w"][g].nbytes + out["m"][g].nbytes
+                           + out["v"][g].nbytes)
+            return out, nbytes
+
+        out, nbytes = self._io("gather", read)
         self.gather_bytes += nbytes
         return out
 
     def scatter(self, f: str, ids: np.ndarray, rows: dict):
-        """Write rows back (the drain side of the store-buffer)."""
+        """Write rows back (the drain side of the store-buffer). Full-row
+        overwrites are idempotent, so the transient-OSError retry simply
+        rewrites the same values."""
         ids = np.asarray(ids, np.int64)
-        nbytes = 0
-        for g in self.groups:
-            self.w[g][f][ids] = rows["w"][g]
-            self.m[g][f][ids] = rows["m"][g]
-            self.v[g][f][ids] = rows["v"][g]
-            nbytes += (rows["w"][g].nbytes + rows["m"][g].nbytes
-                       + rows["v"][g].nbytes)
-        self.ls[f][ids] = rows["ls"]
+
+        def write():
+            nbytes = 0
+            for g in self.groups:
+                self.w[g][f][ids] = rows["w"][g]
+                self.m[g][f][ids] = rows["m"][g]
+                self.v[g][f][ids] = rows["v"][g]
+                nbytes += (rows["w"][g].nbytes + rows["m"][g].nbytes
+                           + rows["v"][g].nbytes)
+            self.ls[f][ids] = rows["ls"]
+            return nbytes
+
+        nbytes = self._io("scatter", write)
         self.scatter_bytes += nbytes + np.asarray(rows["ls"]).nbytes
         return nbytes
 
@@ -238,12 +297,18 @@ class ColdStore:
     # -- persistence / paging -----------------------------------------------
 
     def flush_files(self):
-        """msync every memmap (no-op for the mem backend)."""
+        """msync every memmap (no-op for the mem backend); transient
+        OSErrors retry under the bounded-backoff policy (msync is
+        idempotent)."""
         if self.backend != "mmap":
             return
-        for arr in self._arrays():
-            if isinstance(arr, np.memmap):
-                arr.flush()
+
+        def sync():
+            for arr in self._arrays():
+                if isinstance(arr, np.memmap):
+                    arr.flush()
+
+        self._io("flush_files", sync)
 
     def advise_dontneed(self):
         """Drop resident pages of a *flushed* mmap store (MADV_DONTNEED on
@@ -280,8 +345,13 @@ class ColdStore:
         process)."""
         if self.backend != "mmap":
             return
-        np.savez(os.path.join(self.directory, _SIDECAR),
-                 **{k: np.asarray(v) for k, v in leaves.items()})
+        # atomic + fsync'd: a crash mid-save leaves the previous complete
+        # sidecar, so a reopened store always resumes from *some*
+        # flush-consistent state
+        durable.atomic_write_via(
+            os.path.join(self.directory, _SIDECAR),
+            lambda f: np.savez(
+                f, **{k: np.asarray(v) for k, v in leaves.items()}))
 
     def load_sidecar(self) -> Optional[Dict[str, np.ndarray]]:
         if self.backend != "mmap":

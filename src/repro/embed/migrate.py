@@ -554,6 +554,85 @@ class AsyncHotCold:
                           for g in self.store.groups},
                 "dense": params["dense"]}
 
+    # -- crash-safe snapshots ------------------------------------------------
+
+    def export_snapshot(self, params, state) -> dict:
+        """Flat numpy leaves capturing the complete *flushed* controller
+        state for the ``mem`` backend — settled cold tables (w/m/v), the
+        per-field ``ls`` vector, the planner's residency/frequency maps,
+        ``t``, and the dense tower's params + optimizer moments. Call only
+        right after ``flush`` (buffer drained, hot tier scattered home,
+        ``ls`` uniform at ``t``), which makes the hot tier redundant: a
+        resume regathers it from the tables, exactly as ``flush`` did.
+
+        The ``mmap`` backend needs none of this — its snapshot is a copy
+        of the store directory itself, whose resume sidecar ``flush``
+        already persisted (``prepare``/``init`` replay it on open).
+        """
+        pl = self.planner
+        store = self.store
+        leaves = {"t": np.int64(pl.t)}
+        for f in pl.fields:
+            leaves[f"slot_ids/{f}"] = np.array(pl.slot_ids[f])
+            leaves[f"slot_of/{f}"] = np.array(pl.slot_of[f])
+            leaves[f"slot_ls/{f}"] = np.array(pl.slot_ls[f])
+            leaves[f"freq/{f}"] = np.array(pl.freq[f])
+            leaves[f"ls/{f}"] = np.array(store.ls[f])
+        for g in store.groups:
+            for f in store.fields:
+                leaves[f"cold_w/{g}/{f}"] = np.array(store.w[g][f])
+                leaves[f"cold_m/{g}/{f}"] = np.array(store.m[g][f])
+                leaves[f"cold_v/{g}/{f}"] = np.array(store.v[g][f])
+        for i, leaf in enumerate(jax.tree.leaves(params["dense"])):
+            leaves[f"dense_param/{i}"] = np.asarray(leaf)
+        for i, leaf in enumerate(jax.tree.leaves(state["dense"])):
+            leaves[f"dense_opt/{i}"] = np.asarray(leaf)
+        return leaves
+
+    def import_snapshot(self, leaves, params):
+        """Rebuild (params, state) from ``export_snapshot`` leaves.
+        ``params`` is the freshly *prepared* tree (it supplies the dense
+        treedef; its embed views point at this controller's store, whose
+        tables are overwritten here). Returns the (params, state) pair the
+        trainer resumes from — bitwise the post-flush state the snapshot
+        captured."""
+        pl = self.planner
+        store = self.store
+        t = int(leaves["t"])
+        pl.t = t
+        for f in pl.fields:
+            pl.slot_ids[f][...] = leaves[f"slot_ids/{f}"]
+            pl.slot_of[f][...] = leaves[f"slot_of/{f}"]
+            pl.slot_ls[f][...] = leaves[f"slot_ls/{f}"]
+            pl.freq[f][...] = leaves[f"freq/{f}"]
+            store.ls[f][...] = leaves[f"ls/{f}"]
+        for g in store.groups:
+            for f in store.fields:
+                store.w[g][f][...] = leaves[f"cold_w/{g}/{f}"]
+                store.m[g][f][...] = leaves[f"cold_m/{g}/{f}"]
+                store.v[g][f][...] = leaves[f"cold_v/{g}/{f}"]
+        hot = {k: {g: {} for g in store.groups} for k in ("w", "m", "v")}
+        for g in store.groups:
+            for f in store.fields:
+                sid_c = np.minimum(pl.slot_ids[f], pl.vocab[f] - 1)
+                hot["w"][g][f] = jnp.asarray(
+                    np.asarray(store.w[g][f][sid_c]))
+                hot["m"][g][f] = jnp.asarray(
+                    np.asarray(store.m[g][f][sid_c]))
+                hot["v"][g][f] = jnp.asarray(
+                    np.asarray(store.v[g][f][sid_c]))
+        leaves_p, treedef = jax.tree.flatten(params["dense"])
+        dense = jax.tree.unflatten(treedef, [
+            jnp.asarray(leaves[f"dense_param/{i}"])
+            for i in range(len(leaves_p))])
+        opt_template = self.dense_tx.init(dense)
+        leaves_o, treedef_o = jax.tree.flatten(opt_template)
+        dense_opt = jax.tree.unflatten(treedef_o, [
+            jnp.asarray(leaves[f"dense_opt/{i}"])
+            for i in range(len(leaves_o))])
+        return ({"embed": store.param_views(), "dense": dense},
+                {"step": t, "hot": hot, "dense": dense_opt})
+
     # -- internals ----------------------------------------------------------
 
     @property

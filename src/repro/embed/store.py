@@ -144,8 +144,39 @@ class EmbeddingStore:
         b2: float = 0.999,
         eps: float = 1e-8,
         use_kernel: Optional[bool] = None,
+        nonfinite_guard: bool = False,
     ) -> TrainStepBundle:
-        """Build this placement's (step, init, flush, prepare) bundle."""
+        """Build this placement's (step, init, flush, prepare) bundle.
+
+        ``nonfinite_guard`` wraps the step so a batch whose loss comes out
+        NaN/Inf skips the entire update (params, moments, step counter),
+        counted in ``aux["skipped_steps"]`` — value-exact on clean data.
+        Not available for the async hotcold placement, whose step
+        interleaves host-side eviction work that cannot be skipped.
+        """
+        bundle = self._build_bundle(
+            cfg, hp, clip_kind=clip_kind, r=r, zeta=zeta, clip_t=clip_t,
+            warmup_steps=warmup_steps, b1=b1, b2=b2, eps=eps,
+            use_kernel=use_kernel)
+        if nonfinite_guard:
+            bundle = guard_bundle(bundle)
+        return bundle
+
+    def _build_bundle(
+        self,
+        cfg,
+        hp,
+        *,
+        clip_kind: str = "adaptive_column",
+        r: float = 1.0,
+        zeta: float = 1e-5,
+        clip_t: float = 1.0,
+        warmup_steps: int = 0,
+        b1: float = 0.9,
+        b2: float = 0.999,
+        eps: float = 1e-8,
+        use_kernel: Optional[bool] = None,
+    ) -> TrainStepBundle:
         from ..train import loop as loop_lib  # deferred: train imports core
 
         if use_kernel is None:
@@ -224,6 +255,26 @@ class EmbeddingStore:
                     b1=b1, b2=b2, eps=eps))
         return TrainStepBundle(step, init, flush, prepare, export,
                                scan_step=step.scan_step)
+
+
+def guard_bundle(bundle: TrainStepBundle) -> TrainStepBundle:
+    """Wrap a bundle's step with the non-finite guard (core.builders).
+
+    Re-jits the guarded pure body so both the per-step and the scanned
+    engines run it; everything else in the bundle is untouched. Bundles
+    with a ``stream_driver`` (async hotcold) are rejected — their step must
+    run to fill eviction handles, so a skipped update would deadlock the
+    migration buffer.
+    """
+    if bundle.stream_driver is not None:
+        raise ValueError(
+            "nonfinite_guard is not supported for the async hotcold "
+            "placement (cold_store='mem'/'mmap'): its step fills host-side "
+            "eviction handles and cannot be skipped")
+    body = bundle.scan_step if bundle.scan_step is not None else bundle.step
+    guarded = builders.nonfinite_guard(body)
+    return bundle._replace(step=builders.jit_step(guarded),
+                           scan_step=guarded)
 
 
 def serving_snapshot(bundle: TrainStepBundle, params, state):

@@ -95,6 +95,16 @@ def run_ctr(args) -> None:
         if args.cold_store == "mmap" and not args.cold_dir:
             raise SystemExit("[train] --cold-store mmap needs --cold-dir "
                              "(the on-disk table directory)")
+    if args.snapshot_dir:
+        if args.mode != "stream":
+            raise SystemExit("[train] --snapshot-dir rides the stream "
+                             "cursor; add --mode stream (docs/robustness.md)")
+        if args.snapshot_every <= 0:
+            raise SystemExit("[train] --snapshot-dir needs --snapshot-every "
+                             "N (steps between snapshots)")
+    elif args.resume:
+        raise SystemExit("[train] --resume needs --snapshot-dir (where the "
+                         "snapshots live)")
     cfg = ctr_lib.CTRConfig(
         name=args.model, vocab_sizes=ds.vocab_sizes,
         n_dense=ds.dense.shape[1], emb_dim=args.emb_dim,
@@ -131,7 +141,8 @@ def run_ctr(args) -> None:
     warmup = max(1, len(tr) // args.batch)
     # every placement goes through the one EmbeddingStore bundle interface
     bundle = store.make_bundle(cfg, hp, clip_kind=clip, zeta=args.zeta,
-                               warmup_steps=warmup)
+                               warmup_steps=warmup,
+                               nonfinite_guard=args.nonfinite_guard)
     import contextlib
 
     trace_ctx = contextlib.nullcontext()
@@ -144,34 +155,145 @@ def run_ctr(args) -> None:
         trace_ctx = jax.profiler.trace(args.profile_trace,
                                        create_perfetto_trace=True)
         print(f"[train] profiling to {args.profile_trace} (perfetto trace)")
-    stream = None
-    if args.mode == "stream":
+    # -- crash safety: snapshots, resume, deterministic fault injection --
+    from ..testing import FaultPlan
+    from ..train import snapshot as snapshot_lib
+
+    fault_plan = FaultPlan.from_env()
+    snap_mgr = None
+    token = snapshot_lib.placement_token(store)
+    start_step = 0
+    init_state = None
+    if args.snapshot_dir:
+        snap_mgr = snapshot_lib.SnapshotManager(
+            args.snapshot_dir, retain=args.snapshot_retain,
+            fault_plan=fault_plan)
+    if args.resume:
+        restored = snapshot_lib.resume(
+            snap_mgr, bundle,
+            ctr_lib.init(jax.random.key(args.seed), cfg),
+            token=token, cold_dir=args.cold_dir, warn=print)
+        if restored is None:
+            print(f"[train] --resume: no valid snapshot under "
+                  f"{args.snapshot_dir}; starting fresh")
+        else:
+            p0, s0, start_step, cursor = restored
+            init_state = (p0, s0)
+            print(f"[train] resumed from snapshot step {start_step} "
+                  f"(cursor {cursor})")
+    snap_meta = {"placement": token, "snapshot_every": args.snapshot_every,
+                 "seed": args.seed, "batch": args.batch}
+
+    snapshot_cb = None
+    if snap_mgr is not None or fault_plan is not None:
+        # one callback per chunk boundary: snapshot when the cadence says
+        # so (capture flushes — the returned pair replaces the live one in
+        # BOTH the original and the resumed run, keeping them bitwise
+        # aligned), then give the fault plan its step-boundary kill window
+        last_snap = [start_step]
+
+        def snapshot_cb(params, state, n):
+            if (snap_mgr is not None
+                    and n - last_snap[0] >= args.snapshot_every):
+                params, state = snapshot_lib.capture(
+                    snap_mgr, bundle, params, state, step=n,
+                    cursor={"rows_consumed": n * args.batch},
+                    meta=snap_meta)
+                last_snap[0] = n
+            if fault_plan is not None:
+                fault_plan.maybe_kill(n)
+            return params, state
+
+    def make_events(skip_rows: int = 0):
         # online training: the train split replayed as an endless event
         # stream (the CLI stand-in for a production log tail), re-batched
-        # and chunk-stacked on a worker thread
-        from ..data import stream as stream_lib
-
+        # and chunk-stacked on a worker thread; ``skip_rows`` replays the
+        # deterministic source up to a resume cursor
         events = stream_lib.synthetic_event_stream(
             tr, rows_per_event=max(1, args.batch // 2), seed=args.seed)
-        make_transform = getattr(bundle, "stream_transform", None)
+        if skip_rows:
+            events = stream_lib.skip_rows(events, skip_rows)
+        return events
+
+    stream = None
+    make_transform = getattr(bundle, "stream_transform", None)
+    if args.mode == "stream":
+        from ..data import stream as stream_lib
+
         if make_transform is not None:
             # async cold store: chunks of 1 step, planned on the worker
             # thread one lookahead window (buffer_size) ahead of the
             # device; the transform carries the step budget so no planned
             # step is ever dropped
-            stream = stream_lib.stream_chunks(
-                events, args.batch, 1, buffer_size=4,
-                transform=make_transform(max_steps=args.steps))
+            if snap_mgr is None:
+                stream = stream_lib.stream_chunks(
+                    make_events(start_step * args.batch), args.batch, 1,
+                    buffer_size=4,
+                    transform=make_transform(max_steps=args.steps),
+                    start_rows=start_step * args.batch)
         else:
             stream = stream_lib.stream_chunks(
-                events, args.batch,
-                args.scan_steps if args.engine == "scan" else 1)
-    with trace_ctx:
-        res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
-                        epochs=args.epochs, seed=args.seed, log_fn=print,
-                        step_bundle=bundle, max_steps=args.steps,
-                        engine=args.engine, scan_steps=args.scan_steps,
-                        mode=args.mode, stream=stream)
+                make_events(start_step * args.batch), args.batch,
+                args.scan_steps if args.engine == "scan" else 1,
+                start_rows=start_step * args.batch)
+
+    if args.mode == "stream" and make_transform is not None \
+            and snap_mgr is not None:
+        # async hotcold snapshots run the stream in segments: the planner
+        # races ahead of the device on the worker thread, so a mid-stream
+        # flush would wait on eviction handles of planned-but-undispatched
+        # steps. Ending each segment's stream at the snapshot boundary
+        # (the transform's step budget) dispatches every planned step
+        # first, making the flush — and the snapshot — safe. The
+        # uninterrupted run takes the same segment boundaries, so resumed
+        # and uninterrupted runs stay bitwise identical.
+        from ..train.loop import TrainResult, make_eval_fn
+
+        if init_state is None:
+            params = bundle.prepare(ctr_lib.init(
+                jax.random.key(args.seed), cfg))
+            state = bundle.init(params)
+        else:
+            params, state = init_state
+        n = start_step
+        t0 = time.perf_counter()
+        with trace_ctx:
+            while n < args.steps:
+                target = min(n + args.snapshot_every, args.steps)
+                seg = stream_lib.stream_chunks(
+                    make_events(n * args.batch), args.batch, 1,
+                    buffer_size=4,
+                    transform=make_transform(max_steps=target),
+                    start_rows=n * args.batch)
+                try:
+                    params, state, ran, _ = bundle.stream_driver(
+                        params, state, seg, max_steps=None)
+                finally:
+                    seg.close()
+                n += ran
+                params, state = snapshot_lib.capture(
+                    snap_mgr, bundle, params, state, step=n,
+                    cursor={"rows_consumed": n * args.batch},
+                    meta=snap_meta)
+                if fault_plan is not None:
+                    fault_plan.maybe_kill(n)
+                if ran == 0:
+                    raise SystemExit("[train] stream ended before the "
+                                     f"segment target {target}")
+        seconds = time.perf_counter() - t0
+        final = make_eval_fn(cfg)(params, te) if te is not None else {}
+        res = TrainResult(history=[], final_eval=dict(final),
+                          seconds=seconds, steps=n, params=params,
+                          opt_state=state)
+    else:
+        with trace_ctx:
+            res = train_ctr(cfg, None, tr, te, batch_size=args.batch,
+                            epochs=args.epochs, seed=args.seed, log_fn=print,
+                            step_bundle=bundle, max_steps=args.steps,
+                            engine=args.engine, scan_steps=args.scan_steps,
+                            mode=args.mode, stream=stream,
+                            init_state=init_state, start_step=start_step,
+                            snapshot_cb=snapshot_cb)
     print(f"[train] done: {res.steps} steps in {res.seconds:.1f}s "
           f"-> AUC {100*res.final_eval['auc']:.2f} "
           f"logloss {res.final_eval['logloss']:.4f}")
@@ -341,6 +463,26 @@ def main():
                     help="forward/backward activation dtype; masters, "
                          "CowClip stats and Adam moments stay float32 "
                          "(docs/cli.md)")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="take periodic crash-safe snapshots into DIR "
+                         "(atomic write + checksummed manifest, retain "
+                         "--snapshot-retain); requires --mode stream and "
+                         "--snapshot-every (docs/robustness.md)")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help="steps between snapshots; also the flush cadence, "
+                         "so a resumed run is bitwise identical to an "
+                         "uninterrupted run with the same value")
+    ap.add_argument("--snapshot-retain", type=int, default=3,
+                    help="keep the newest K snapshots (default 3)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restart from the latest *valid* snapshot in "
+                         "--snapshot-dir (corrupt/torn ones are skipped); "
+                         "falls back to a fresh start when none exists")
+    ap.add_argument("--nonfinite-guard", action="store_true",
+                    help="skip any update whose batch loss is NaN/Inf "
+                         "(counted in aux['skipped_steps']); value-exact "
+                         "on clean data; not available with --cold-store "
+                         "mem/mmap")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="simulate N CPU devices (sets XLA_FLAGS; must act "
                          "before jax initializes, so it is handled first "

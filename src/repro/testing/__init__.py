@@ -1,0 +1,9 @@
+"""Deterministic fault injection for robustness tests (repro.testing.faults)."""
+
+from .faults import (  # noqa: F401
+    FAULT_PLAN_ENV,
+    FaultPlan,
+    install_coldstore_faults,
+    kill_now,
+    transient_oserror_hook,
+)

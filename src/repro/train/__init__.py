@@ -1,4 +1,4 @@
 """repro.train — training loop, metrics, checkpointing."""
 
-from . import checkpoint, metrics
+from . import checkpoint, metrics, snapshot
 from .loop import TrainResult, make_eval_fn, make_train_step, train_ctr

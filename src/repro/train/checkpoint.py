@@ -2,16 +2,21 @@
 
 Works for params + optimizer state (any nesting of dict/tuple/list/NamedTuple
 with array leaves). Scalars (step counters) round-trip as 0-d arrays.
+
+Saves are crash-safe: write-temp + fsync + atomic rename + directory fsync
+(core.durable), so a checkpoint file on disk is always either the previous
+complete one or the new complete one — never a torn prefix.
 """
 
 from __future__ import annotations
 
 import os
-import tempfile
 from typing import Any
 
 import jax
 import numpy as np
+
+from ..core import durable
 
 PyTree = Any
 
@@ -35,19 +40,12 @@ def _path_str(entry) -> str:
 
 
 def save(path: str, tree: PyTree) -> None:
-    """Atomic save: write temp file in the same dir, then rename."""
+    """Atomic, durable save: write temp file in the same dir, fsync it,
+    rename onto ``path``, fsync the directory."""
     flat = _flatten_with_paths(tree)
     d = os.path.dirname(os.path.abspath(path)) or "."
     os.makedirs(d, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
-    try:
-        with os.fdopen(fd, "wb") as f:
-            np.savez(f, **flat)
-        os.replace(tmp, path)
-    except BaseException:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-        raise
+    durable.atomic_write_via(path, lambda f: np.savez(f, **flat))
 
 
 def restore(path: str, template: PyTree) -> PyTree:

@@ -756,6 +756,9 @@ def train_ctr(
     prefetch_buffers: int = 2,
     mode: str = "epochs",
     stream=None,
+    init_state=None,
+    start_step: int = 0,
+    snapshot_cb=None,
 ) -> TrainResult:
     """Epoch driver. By default steps through the composable-optimizer path
     (``tx``); pass a ``core.builders.TrainStepBundle`` (any
@@ -781,6 +784,16 @@ def train_ctr(
     chunk geometry (batch size, scan_steps) is the stream's; this
     function's ``batch_size``/``scan_steps``/``epochs`` are ignored. The
     stream is closed on exit (also on an early ``max_steps`` cut).
+
+    Crash-safe resume hooks (repro.train.snapshot): ``init_state`` is a
+    pre-built ``(params, opt_state)`` pair (already ``prepare``d — a
+    snapshot restore) that replaces the fresh init; ``start_step`` seeds
+    the step counter so ``max_steps`` keeps meaning *total* steps across
+    the original and resumed processes. ``snapshot_cb(params, opt_state,
+    n_steps) -> (params, opt_state)`` is invoked at every chunk boundary
+    in stream mode and every step boundary in eager epoch mode; the
+    callback owns the cadence (and may flush — the returned pair replaces
+    the live one, so a snapshot's flush stays part of the trajectory).
     """
     from . import engine as engine_lib
 
@@ -793,15 +806,23 @@ def train_ctr(
     if (mode == "stream") != (stream is not None):
         raise ValueError("mode='stream' requires a chunk stream (and a "
                          "stream requires mode='stream')")
-    params = ctr.init(jax.random.key(seed), cfg)
-    if step_bundle is not None:
-        params = step_bundle.prepare(params)
-        step_fn, opt_state, flush = (
-            step_bundle.step, step_bundle.init(params), step_bundle.flush)
+    if init_state is not None:
+        if step_bundle is None:
+            raise ValueError("init_state (a snapshot restore) requires a "
+                             "step_bundle")
+        params, opt_state = init_state
+        step_fn, flush = step_bundle.step, step_bundle.flush
     else:
-        opt_state = tx.init(params)
-        step_fn = make_train_step(cfg, tx)
-        flush = None
+        params = ctr.init(jax.random.key(seed), cfg)
+        if step_bundle is not None:
+            params = step_bundle.prepare(params)
+            step_fn, opt_state, flush = (
+                step_bundle.step, step_bundle.init(params),
+                step_bundle.flush)
+        else:
+            opt_state = tx.init(params)
+            step_fn = make_train_step(cfg, tx)
+            flush = None
     eval_fn = make_eval_fn(cfg)
     driver = getattr(step_bundle, "stream_driver", None)
     runner = None
@@ -815,7 +836,7 @@ def train_ctr(
                 engine_lib.resolve_scan_step(step_bundle, step_fn))
 
     history = []
-    n_steps = 0
+    n_steps = int(start_step)
     t0 = time.perf_counter()
 
     if mode == "stream" and driver is not None:
@@ -859,6 +880,9 @@ def train_ctr(
                         params, opt_state, _ = step_fn(
                             params, opt_state, batch)
                         n_steps += 1
+                if snapshot_cb is not None:
+                    params, opt_state = snapshot_cb(params, opt_state,
+                                                    n_steps)
                 if max_steps is not None and n_steps >= max_steps:
                     break
         finally:
@@ -892,6 +916,9 @@ def train_ctr(
                 batch = {k: jnp.asarray(v) for k, v in b.items()}
                 params, opt_state, aux = step_fn(params, opt_state, batch)
                 n_steps += 1
+                if snapshot_cb is not None:
+                    params, opt_state = snapshot_cb(params, opt_state,
+                                                    n_steps)
                 if max_steps is not None and n_steps >= max_steps:
                     break
         if eval_every_epoch and test_ds is not None:

@@ -1,0 +1,369 @@
+"""Deterministic fault injection (repro.testing.faults) and the defenses
+it exercises: ColdStore transient-I/O retry with exponential backoff, TSV
+quarantine of malformed rows, the ChunkStream worker-failure re-raise,
+and the non-finite step guard.
+
+The point of the harness is determinism: a seeded ``FaultPlan`` makes two
+runs suffer identical faults, and ``to_env``/``from_env`` carries a plan
+across a process boundary so subprocess crash tests (test_snapshot.py)
+stay reproducible.
+"""
+
+import logging
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.stream import follow_tsv_events, stream_chunks, write_tsv_rows
+from repro.data.synthetic import make_ctr_dataset
+from repro.embed.coldstore import ColdStore
+from repro.testing import (FAULT_PLAN_ENV, FaultPlan,
+                           install_coldstore_faults, transient_oserror_hook)
+
+VOCABS = (60, 13, 5)
+
+
+def _store(vocab=16, dim=3):
+    spec = {"fm": {"field_0": (vocab, dim, "float32")}}
+    store = ColdStore.create(spec, backend="mem")
+    store.w["fm"]["field_0"][...] = np.arange(
+        vocab * dim, dtype=np.float32).reshape(vocab, dim)
+    return store
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_plan_env_roundtrip(monkeypatch):
+    plan = FaultPlan(kill_at_step=7, kill_in_snapshot=True,
+                     io_errors={"gather": 2}, stream_raise_at_chunk=3,
+                     corrupt_row_rate=0.25, seed=5)
+    env = plan.to_env()
+    monkeypatch.setenv(FAULT_PLAN_ENV, env[FAULT_PLAN_ENV])
+    back = FaultPlan.from_env()
+    assert back.kill_at_step == 7 and back.kill_in_snapshot
+    assert back.io_errors == {"gather": 2}
+    assert back.stream_raise_at_chunk == 3
+    assert back.corrupt_row_rate == 0.25 and back.seed == 5
+
+    monkeypatch.delenv(FAULT_PLAN_ENV)
+    assert FaultPlan.from_env() is None
+
+
+def test_plan_kill_predicates(monkeypatch):
+    killed = []
+    monkeypatch.setattr("repro.testing.faults.kill_now",
+                        lambda: killed.append(True))
+    plan = FaultPlan(kill_at_step=6)
+    plan.maybe_kill(5)
+    assert not killed
+    plan.maybe_kill(6, in_snapshot=True)   # plan wants a boundary kill
+    assert not killed
+    plan.maybe_kill(6)
+    assert killed
+
+    killed.clear()
+    snap_plan = FaultPlan(kill_at_step=6, kill_in_snapshot=True)
+    snap_plan.maybe_kill(8)                # boundary: not this plan's site
+    assert not killed
+    snap_plan.maybe_kill(8, in_snapshot=True)
+    assert killed
+
+
+def test_plan_io_budget_is_deterministic():
+    plan = FaultPlan(io_errors={"gather": 2})
+    faults = [plan.io_fault("gather") for _ in range(4)]
+    assert faults == [True, True, False, False]
+    assert plan.io_fault("scatter") is False
+
+    a = FaultPlan(io_error_every=3, seed=11)
+    b = FaultPlan(io_error_every=3, seed=11)
+    seq_a = [a.io_fault("gather") for _ in range(50)]
+    seq_b = [b.io_fault("gather") for _ in range(50)]
+    assert seq_a == seq_b and any(seq_a) and not all(seq_a)
+
+
+def test_corrupt_tsv_line_deterministic_and_malformed():
+    plan = FaultPlan(corrupt_row_rate=1.0, seed=3)
+    line = "1.0\t0.5\t0.5\t0.5\t10\t3\t2"
+    out = plan.corrupt_tsv_line(line, n_fields=3)
+    assert out != line
+    plan2 = FaultPlan(corrupt_row_rate=1.0, seed=3)
+    assert plan2.corrupt_tsv_line(line, n_fields=3) == out
+    clean = FaultPlan(corrupt_row_rate=0.0)
+    assert clean.corrupt_tsv_line(line, n_fields=3) == line
+
+
+# ---------------------------------------------------------------------------
+# ColdStore transient-I/O retry with backoff
+# ---------------------------------------------------------------------------
+
+
+def test_coldstore_retries_transient_errors(tmp_path):
+    """Injected OSErrors on every I/O entry point are absorbed by the
+    bounded retry, counted in ``faults_retried``, and the data is right.
+    ``flush_files`` only does I/O on the mmap backend, so that leg runs
+    against an on-disk store."""
+    store = _store()
+    store.io_backoff = 1e-4
+    store.fault_hook = transient_oserror_hook(
+        {"gather": 2, "scatter": 1})
+    got = store.gather("field_0", np.asarray([2, 5]))
+    np.testing.assert_array_equal(
+        got["w"]["fm"], store.w["fm"]["field_0"][[2, 5]])
+    store.scatter("field_0", np.asarray([0]),
+                  {"w": {"fm": np.ones((1, 3), np.float32)},
+                   "m": {"fm": np.zeros((1, 3), np.float32)},
+                   "v": {"fm": np.zeros((1, 3), np.float32)},
+                   "ls": np.asarray([4], np.int32)})
+    assert store.faults_retried == 3
+    np.testing.assert_array_equal(store.w["fm"]["field_0"][0],
+                                  np.ones((3,), np.float32))
+
+    spec = {"fm": {"field_0": (8, 3, "float32")}}
+    mm = ColdStore.create(spec, backend="mmap", directory=str(tmp_path))
+    mm.io_backoff = 1e-4
+    mm.fault_hook = transient_oserror_hook({"flush_files": 1})
+    mm.flush_files()
+    assert mm.faults_retried == 1
+    mm.close()
+
+
+def test_coldstore_retry_backoff_is_exponential(monkeypatch):
+    sleeps = []
+    monkeypatch.setattr("repro.embed.coldstore.time.sleep", sleeps.append)
+    store = _store()
+    store.io_backoff = 0.01
+    store.fault_hook = transient_oserror_hook({"gather": 3})
+    store.gather("field_0", np.asarray([1]))
+    assert sleeps == [0.01, 0.02, 0.04]
+
+
+def test_coldstore_retries_exhausted_raises():
+    store = _store()
+    store.io_backoff = 1e-4
+    store.io_retries = 2
+    store.fault_hook = transient_oserror_hook({"gather": 99})
+    with pytest.raises(OSError, match="injected transient gather"):
+        store.gather("field_0", np.asarray([1]))
+    assert store.faults_retried == 2   # the budget, not the final raise
+
+
+def test_install_coldstore_faults_uses_plan():
+    store = _store()
+    store.io_backoff = 1e-4
+    plan = FaultPlan(io_errors={"gather": 1})
+    assert install_coldstore_faults(store, plan) is store
+    store.gather("field_0", np.asarray([1]))
+    assert store.faults_retried == 1
+
+
+# ---------------------------------------------------------------------------
+# TSV quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_malformed_rows(tmp_path, caplog):
+    """Corrupted rows land in the side file with one warning per shape;
+    every clean row still comes through, in order."""
+    ds = make_ctr_dataset(64, VOCABS, n_dense=3, seed=4)
+    path = str(tmp_path / "events.tsv")
+    write_tsv_rows(path, ds, 0, 32)
+    with open(path) as f:
+        lines = f.read().splitlines()
+    bad = ["1.0\t0.5",                              # wrong field count
+           "1.0\t0.5\t0.5\t0.5\tgarbage\t3\t2",     # non-integer id
+           "1.0\t0.5\t0.5\t0.5\t10\t3\t2\t9",       # wrong field count
+           "x\t0.5\t0.5\t0.5\t10\t3\t2",            # non-numeric label
+           "1.0\t0.5\t0.5\t0.5\t10\t99\t2",         # id out of range
+           "1.0\t0.5\t0.5\t0.5\t10\t99\t2"]         # same shape again
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:16] + bad + lines[16:]) + "\n")
+
+    cursor = {}
+    with caplog.at_level(logging.WARNING, logger="repro.data.stream"):
+        events = list(follow_tsv_events(
+            path, VOCABS, 3, rows_per_event=8, idle_timeout_s=0.1,
+            cursor=cursor))
+    got = np.concatenate([e["labels"] for e in events])
+    np.testing.assert_array_equal(got, ds.labels[:32])
+    assert cursor["rows_quarantined"] == 6
+    assert cursor["rows_emitted"] == 32
+    with open(path + ".quarantine") as f:
+        assert f.read().splitlines() == bad
+    # one warning per malformation shape: nfields(2), nfields(8), int,
+    # float, range — the repeated range row logs nothing new
+    warnings = [r for r in caplog.records if "quarantined" in r.message]
+    assert len(warnings) == 5
+
+
+def test_quarantine_custom_path_and_offset_resume(tmp_path):
+    """The byte cursor skips quarantined rows too: resuming from
+    ``cursor['offset']`` re-reads nothing."""
+    ds = make_ctr_dataset(32, VOCABS, n_dense=3, seed=5)
+    path = str(tmp_path / "events.tsv")
+    write_tsv_rows(path, ds, 0, 16)
+    with open(path, "a") as f:
+        f.write("garbage line\n")
+    write_tsv_rows(path, ds, 16, 32)
+
+    qpath = str(tmp_path / "bad.rows")
+    cursor = {}
+    first = list(follow_tsv_events(path, VOCABS, 3, rows_per_event=16,
+                                   idle_timeout_s=0.1, cursor=cursor,
+                                   quarantine_path=qpath))
+    assert cursor["rows_emitted"] == 32 and cursor["rows_quarantined"] == 1
+    assert os.path.exists(qpath)
+    np.testing.assert_array_equal(first[0]["labels"], ds.labels[:16])
+
+    write_tsv_rows(path, ds, 0, 8)   # 8 more rows after the cursor
+    cursor2 = {}
+    more = list(follow_tsv_events(path, VOCABS, 3, rows_per_event=8,
+                                  idle_timeout_s=0.1,
+                                  start_offset=cursor["offset"],
+                                  cursor=cursor2))
+    assert cursor2["rows_emitted"] == 8
+    np.testing.assert_array_equal(more[0]["labels"], ds.labels[:8])
+
+
+# ---------------------------------------------------------------------------
+# ChunkStream worker fault
+# ---------------------------------------------------------------------------
+
+
+def test_stream_worker_fault_reraises_in_consumer():
+    ds = make_ctr_dataset(512, VOCABS, n_dense=3, seed=6)
+
+    def events():
+        while True:
+            yield {"ids": ds.ids[:64], "dense": ds.dense[:64],
+                   "labels": ds.labels[:64]}
+
+    plan = FaultPlan(stream_raise_at_chunk=2)
+    stream = stream_chunks(events(), 32, 2,
+                           transform=plan.stream_transform_hook())
+    got = 0
+    with pytest.raises(RuntimeError, match="injected stream-worker fault"):
+        for _ in stream:
+            got += 1
+    assert got == 2
+    stream.close()
+
+
+# ---------------------------------------------------------------------------
+# non-finite step guard
+# ---------------------------------------------------------------------------
+
+
+def _guard_setup():
+    from repro.core import scale_hyperparams
+    from repro.embed import store_for
+    from repro.models import ctr
+
+    cfg = ctr.CTRConfig(name="deepfm", vocab_sizes=VOCABS, n_dense=3,
+                        emb_dim=8, mlp_dims=(16, 16, 16), emb_sigma=1e-2,
+                        sparse=True, placement="sparse")
+    hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-3,
+                           base_batch=32, batch_size=32, base_dense_lr=2e-3)
+    return cfg, hp, store_for(cfg)
+
+
+def _batch(ds, lo, hi):
+    return {"ids": np.asarray(ds.ids[lo:hi]),
+            "dense": np.asarray(ds.dense[lo:hi]),
+            "labels": np.asarray(ds.labels[lo:hi])}
+
+
+def test_nonfinite_guard_skips_poisoned_batch():
+    """A batch with a NaN dense feature poisons the loss; the guarded
+    step leaves params, moments, and the step counter untouched and
+    counts the skip. Clean batches advance exactly as unguarded."""
+    import jax
+
+    cfg, hp, store = _guard_setup()
+    ds = make_ctr_dataset(128, VOCABS, n_dense=3, seed=7)
+    plain = store.make_bundle(cfg, hp)
+    guarded = store.make_bundle(cfg, hp, nonfinite_guard=True)
+
+    from repro.models import ctr
+    p0 = ctr.init(jax.random.key(0), cfg)
+    pp, sp = plain.prepare(p0), None
+    sp = plain.init(pp)
+    pg = guarded.prepare(ctr.init(jax.random.key(0), cfg))
+    sg = guarded.init(pg)
+
+    # clean step: guarded == unguarded, bit for bit, skip counter 0
+    b = _batch(ds, 0, 32)
+    pp, sp, _ = plain.step(pp, sp, b)
+    pg, sg, aux = guarded.step(pg, sg, b)
+    assert int(aux["skipped_steps"]) == 0
+    for a, c in zip(jax.tree.leaves(plain.export(pp)),
+                    jax.tree.leaves(guarded.export(pg))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    # poisoned step: guarded skips (params + state frozen), counts it
+    poison = _batch(ds, 32, 64)
+    poison["dense"] = poison["dense"].copy()
+    poison["dense"][0, 0] = np.nan
+    before_p = jax.tree.map(np.asarray, pg)
+    before_s = jax.tree.map(np.asarray, sg)
+    pg, sg, aux = guarded.step(pg, sg, poison)
+    assert int(aux["skipped_steps"]) == 1
+    assert not np.isfinite(float(aux["loss"]))
+    for a, c in zip(jax.tree.leaves(before_p), jax.tree.leaves(pg)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    for a, c in zip(jax.tree.leaves(before_s), jax.tree.leaves(sg)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    # training continues cleanly after the skip
+    good = _batch(ds, 64, 96)
+    pg, sg, aux = guarded.step(pg, sg, good)
+    assert int(aux["skipped_steps"]) == 0
+    assert np.isfinite(float(aux["loss"]))
+
+
+def test_nonfinite_guard_scans():
+    """The guard composes with the scan engine: a poisoned batch inside a
+    chunk is skipped, the rest of the chunk applies."""
+    import jax
+
+    from repro.train import train_ctr
+    from repro.data.stream import stream_chunks, synthetic_event_stream
+
+    cfg, hp, store = _guard_setup()
+    ds = make_ctr_dataset(600, VOCABS, n_dense=3, zipf_a=1.2, seed=9)
+    tr, _ = ds.split(0.8)
+    bundle = store.make_bundle(cfg, hp, nonfinite_guard=True)
+
+    poisoned = [0]
+
+    def events():
+        for i, ev in enumerate(
+                synthetic_event_stream(tr, rows_per_event=48, seed=1)):
+            if i == 2:
+                ev = dict(ev, dense=ev["dense"].copy())
+                ev["dense"][:, 0] = np.nan
+                poisoned[0] += 1
+            yield ev
+
+    stream = stream_chunks(events(), 32, 2)
+    res = train_ctr(cfg, None, tr, None, batch_size=32, seed=0,
+                    step_bundle=bundle, engine="scan", mode="stream",
+                    stream=stream, max_steps=8)
+    assert poisoned[0] == 1
+    assert res.steps == 8
+    for leaf in jax.tree.leaves(bundle.export(res.params)):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_nonfinite_guard_rejected_for_async_hotcold(tmp_path):
+    cfg, hp, _ = _guard_setup()
+    from repro.embed import EmbeddingStore
+
+    store = EmbeddingStore(placement="hotcold", hot_capacity=16,
+                           cold_store="mem")
+    with pytest.raises(ValueError, match="async hotcold"):
+        store.make_bundle(cfg, hp, nonfinite_guard=True)

@@ -1,0 +1,370 @@
+"""Crash-safe snapshots (repro.train.snapshot): manifest atomicity,
+checksum fallback, retain-N rotation, and exact resume.
+
+The headline contract: a trainer SIGKILLed at an arbitrary step and
+restarted with ``--resume`` exports params **bitwise identical** to an
+uninterrupted run with the same ``--snapshot-every`` cadence (the cadence
+matters because each snapshot's flush settles pending lazy decay, which
+is part of the trajectory). The subprocess matrix proves it end-to-end —
+through ``repro.launch.train``, a real SIGKILL, and a fresh process —
+for the sparse placement (kill landing with non-zero pending lazy-decay
+depth), a kill *inside* the snapshot write (torn ``*.tmp`` must be
+ignored), and the async hot/cold placement over an mmap ColdStore.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.testing import FaultPlan
+from repro.train.snapshot import SnapshotManager, capture, overlay, resume
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+VOCABS = (60, 13, 5)
+
+
+# ---------------------------------------------------------------------------
+# SnapshotManager units
+# ---------------------------------------------------------------------------
+
+
+def _save(mgr, step, value=None):
+    return mgr.save(step, {"canonical": {"x": np.full((3,), value
+                                                      if value is not None
+                                                      else step,
+                                                      np.float32)}},
+                    {"step": step, "cursor": {"rows_consumed": step * 8}})
+
+
+def test_save_validate_roundtrip(tmp_path):
+    mgr = SnapshotManager(str(tmp_path))
+    path = _save(mgr, 4)
+    assert mgr.validate(path)
+    step, found = mgr.latest_valid()
+    assert step == 4 and found == path
+    manifest = mgr.read_manifest(path)
+    assert manifest["meta"]["cursor"]["rows_consumed"] == 32
+    assert "canonical.npz" in manifest["files"]
+    np.testing.assert_array_equal(mgr.load_arrays(path, "canonical")["x"],
+                                  np.full((3,), 4, np.float32))
+
+
+def test_torn_tmp_dir_is_not_a_snapshot(tmp_path):
+    """A crash before the rename leaves ``snap-*.tmp`` — invisible to
+    resume, and garbage-collected by the next successful save."""
+    mgr = SnapshotManager(str(tmp_path))
+    _save(mgr, 4)
+    torn = tmp_path / "snap-00000008.tmp"
+    torn.mkdir()
+    (torn / "canonical.npz").write_bytes(b"half a payload")
+    assert mgr.latest_valid()[0] == 4
+    _save(mgr, 12)
+    assert not torn.exists()
+    assert mgr.latest_valid()[0] == 12
+
+
+def test_corrupted_latest_falls_back_to_previous(tmp_path):
+    """Bit-rot in the newest snapshot (checksum mismatch) silently falls
+    back to the previous valid one; a corrupt manifest too."""
+    mgr = SnapshotManager(str(tmp_path))
+    _save(mgr, 4)
+    p8 = _save(mgr, 8)
+    payload = os.path.join(p8, "canonical.npz")
+    raw = bytearray(open(payload, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(payload, "wb").write(bytes(raw))
+    assert not mgr.validate(p8)
+    assert mgr.latest_valid()[0] == 4
+
+    p12 = _save(mgr, 12)
+    open(os.path.join(p12, "manifest.json"), "w").write("{not json")
+    assert mgr.latest_valid()[0] == 4
+
+
+def test_retain_rotation(tmp_path):
+    mgr = SnapshotManager(str(tmp_path), retain=2)
+    for s in (4, 8, 12, 16):
+        _save(mgr, s)
+    assert mgr.list_steps() == [12, 16]
+    assert mgr.latest_valid()[0] == 16
+
+
+def test_retain_validates():
+    with pytest.raises(ValueError, match="retain"):
+        SnapshotManager("/tmp/never-created", retain=0)
+
+
+def test_mid_snapshot_kill_hook_fires_between_payload_and_manifest(
+        tmp_path, monkeypatch):
+    """The fault hook runs after payloads exist but before the manifest /
+    rename — exactly the torn-write window. Simulate the kill with an
+    exception and check nothing was published."""
+    class Boom(BaseException):
+        pass
+
+    plan = FaultPlan(kill_at_step=8, kill_in_snapshot=True)
+    monkeypatch.setattr("repro.testing.faults.kill_now",
+                        lambda: (_ for _ in ()).throw(Boom()))
+    mgr = SnapshotManager(str(tmp_path), fault_plan=plan)
+    _save(mgr, 4)
+    with pytest.raises(Boom):
+        _save(mgr, 8)
+    assert mgr.latest_valid()[0] == 4
+
+
+def test_overlay_roundtrips_scalars_and_arrays():
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": (np.int32(7), 3)}
+    flat = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b/0": np.asarray(np.int32(7)), "b/1": np.asarray(3)}
+    out = overlay(tree, flat)
+    np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
+    assert int(out["b"][0]) == 7
+    assert out["b"][1] == 3 and isinstance(out["b"][1], int)
+    with pytest.raises(KeyError, match="missing leaf"):
+        overlay(tree, {"a": flat["a"], "b/0": flat["b/0"]})
+    with pytest.raises(ValueError, match="shape"):
+        overlay({"a": np.zeros((2, 2))}, {"a": np.zeros((3,))})
+
+
+# ---------------------------------------------------------------------------
+# in-process capture/resume: bitwise continuation (sparse placement)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_setup():
+    import jax
+
+    from repro.core import scale_hyperparams
+    from repro.data.stream import (skip_rows, stream_chunks,
+                                   synthetic_event_stream)
+    from repro.data.synthetic import make_ctr_dataset
+    from repro.embed import store_for
+    from repro.models import ctr
+
+    cfg = ctr.CTRConfig(name="deepfm", vocab_sizes=VOCABS, n_dense=3,
+                        emb_dim=8, mlp_dims=(16, 16, 16), emb_sigma=1e-2,
+                        sparse=True, placement="sparse")
+    hp = scale_hyperparams("cowclip", base_lr=1e-3, base_l2=1e-3,
+                           base_batch=32, batch_size=32, base_dense_lr=2e-3)
+    ds = make_ctr_dataset(600, VOCABS, n_dense=3, zipf_a=1.2, seed=9)
+    tr, _ = ds.split(0.8)
+    store = store_for(cfg)
+
+    def events(skip=0):
+        ev = synthetic_event_stream(tr, rows_per_event=48, seed=1)
+        return skip_rows(ev, skip) if skip else ev
+
+    def make_stream(skip=0):
+        return stream_chunks(events(skip), 32, 2, start_rows=skip)
+
+    def init_params():
+        return ctr.init(jax.random.key(0), cfg)
+
+    return cfg, hp, tr, store, make_stream, init_params
+
+
+def test_inprocess_resume_is_bitwise(tmp_path):
+    """train_ctr + snapshot_cb, then a fresh bundle resumed mid-run from
+    the snapshot dir: exported params match an uninterrupted run with the
+    same cadence, bit for bit."""
+    import jax
+
+    from repro.train import train_ctr
+    from repro.train.snapshot import placement_token
+
+    cfg, hp, tr, store, make_stream, init_params = _sparse_setup()
+    token = placement_token(store)
+
+    def run(snap_dir, *, start=0, init_state=None, max_steps=12):
+        bundle = store.make_bundle(cfg, hp)
+        mgr = SnapshotManager(snap_dir)
+        last = [start]
+
+        def cb(params, state, n):
+            if n - last[0] >= 4:
+                params, state = capture(
+                    mgr, bundle, params, state, step=n,
+                    cursor={"rows_consumed": n * 32},
+                    meta={"placement": token})
+                last[0] = n
+            return params, state
+
+        res = train_ctr(cfg, None, tr, None, batch_size=32, seed=0,
+                        step_bundle=bundle, engine="scan", mode="stream",
+                        stream=make_stream(start * 32), max_steps=max_steps,
+                        init_state=init_state, start_step=start,
+                        snapshot_cb=cb)
+        return bundle, res
+
+    # reference: uninterrupted, snapshots every 4 of 12 steps
+    bundle_a, res_a = run(str(tmp_path / "a"))
+    leaves_a = jax.tree.leaves(bundle_a.export(res_a.params))
+
+    # interrupted: run only to step 8 (snapshots at 4 and 8), then resume
+    # from the dir with a *fresh* bundle and finish
+    run(str(tmp_path / "b"), max_steps=8)
+    mgr_b = SnapshotManager(str(tmp_path / "b"))
+    bundle_b = store.make_bundle(cfg, hp)
+    restored = resume(mgr_b, bundle_b, init_params(), token=token)
+    assert restored is not None
+    params, state, start, cursor = restored
+    assert start == 8 and cursor["rows_consumed"] == 256
+    _, res_b = run(str(tmp_path / "b"), start=start,
+                   init_state=(params, state))
+    leaves_b = jax.tree.leaves(bundle_b.export(res_b.params))
+    assert res_b.steps == res_a.steps == 12
+    for a, b in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cross_placement_resume_is_params_only(tmp_path):
+    """A snapshot written by one placement resumes under another:
+    canonical params restore, optimizer starts fresh, and the caller is
+    warned."""
+    import jax
+
+    from repro.core import build_train_step
+
+    cfg, hp, tr, store, make_stream, init_params = _sparse_setup()
+    bundle = store.make_bundle(cfg, hp)
+    params = bundle.prepare(init_params())
+    state = bundle.init(params)
+    stream = make_stream()
+    for chunk in stream:
+        for i in range(chunk["labels"].shape[0]):
+            batch = {k: np.asarray(v[i]) for k, v in chunk.items()}
+            params, state, _ = bundle.step(params, state, batch)
+        break
+    stream.close()
+    mgr = SnapshotManager(str(tmp_path))
+    params, state = capture(mgr, bundle, params, state, step=2,
+                            cursor={"rows_consumed": 64},
+                            meta={"placement": "sparse:auto:none"})
+
+    import dataclasses
+
+    warnings = []
+    dense_cfg = dataclasses.replace(cfg, sparse=False, placement=None)
+    sub_bundle = build_train_step(dense_cfg, hp, path="substrate")
+    restored = resume(mgr, sub_bundle, init_params(),
+                      token="dense:substrate:none", warn=warnings.append)
+    assert restored is not None
+    r_params, r_state, r_step, _ = restored
+    assert r_step == 2
+    assert warnings and "params-only" in warnings[0]
+    want = jax.tree.leaves(bundle.export(params))
+    got = jax.tree.leaves(sub_bundle.export(r_params))
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_empty_dir_returns_none(tmp_path):
+    cfg, hp, _, store, _, init_params = _sparse_setup()
+    bundle = store.make_bundle(cfg, hp)
+    mgr = SnapshotManager(str(tmp_path))
+    assert resume(mgr, bundle, init_params(),
+                  token="sparse:auto:none") is None
+
+
+# ---------------------------------------------------------------------------
+# subprocess SIGKILL matrix (the real thing: launch CLI, SIGKILL, resume)
+# ---------------------------------------------------------------------------
+
+
+def _train_cmd(snap_dir, extra):
+    return [sys.executable, "-m", "repro.launch.train", "--task", "ctr",
+            "--mode", "stream", "--steps", "12", "--samples", "2048",
+            "--batch", "128", "--base-batch", "128", "--snapshot-every", "4",
+            "--snapshot-dir", snap_dir] + extra
+
+
+def _run(cmd, plan=None):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    if plan is not None:
+        env.update(plan.to_env())
+    return subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
+                          text=True, timeout=600)
+
+
+def _params_of(path):
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files if k.startswith("params/")}
+
+
+@pytest.mark.parametrize("case, place_args, plan", [
+    # kill lands at a chunk boundary between snapshots, i.e. with
+    # non-zero pending lazy-decay depth in the live sparse state
+    ("sparse_boundary",
+     ["--placement", "sparse", "--engine", "scan", "--scan-steps", "2"],
+     FaultPlan(kill_at_step=6)),
+    # kill lands INSIDE the snapshot write at step 8: payloads written,
+    # manifest/rename never happens -> torn .tmp, resume uses step 4
+    ("sparse_mid_snapshot",
+     ["--placement", "sparse", "--engine", "scan", "--scan-steps", "2"],
+     FaultPlan(kill_at_step=8, kill_in_snapshot=True)),
+    # the async hot/cold placement over an out-of-core mmap ColdStore:
+    # snapshot copies the store directory, resume reopens it
+    ("hotcold_async_mmap",
+     ["--placement", "hotcold", "--cold-store", "mmap",
+      "--hot-capacity", "64"],
+     FaultPlan(kill_at_step=6)),
+])
+def test_sigkill_resume_bitwise(tmp_path, case, place_args, plan):
+    if "mmap" in case:
+        place_args = place_args + ["--cold-dir",
+                                   str(tmp_path / "cold_live")]
+
+    ref_args = list(place_args)
+    if "mmap" in case:
+        ref_args[ref_args.index(str(tmp_path / "cold_live"))] = \
+            str(tmp_path / "cold_ref")
+    r = _run(_train_cmd(str(tmp_path / "ref"),
+                        ref_args + ["--checkpoint",
+                                    str(tmp_path / "ref.npz")]))
+    assert r.returncode == 0, r.stderr[-2000:]
+
+    r = _run(_train_cmd(str(tmp_path / "snap"), place_args), plan=plan)
+    assert r.returncode == -9, (r.returncode, r.stderr[-2000:])
+
+    snaps = sorted(p.name for p in (tmp_path / "snap").iterdir())
+    if case == "sparse_mid_snapshot":
+        assert "snap-00000008.tmp" in snaps and "snap-00000008" not in snaps
+
+    r = _run(_train_cmd(str(tmp_path / "snap"),
+                        place_args + ["--resume", "--checkpoint",
+                                      str(tmp_path / "resumed.npz")]))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "resumed from snapshot step" in r.stdout
+    if case == "sparse_mid_snapshot":
+        assert "resumed from snapshot step 4" in r.stdout
+
+    ref = _params_of(tmp_path / "ref.npz")
+    got = _params_of(tmp_path / "resumed.npz")
+    assert set(ref) == set(got)
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k], err_msg=k)
+
+
+def test_resume_without_snapshots_starts_fresh(tmp_path):
+    r = _run(_train_cmd(str(tmp_path / "empty"),
+                        ["--placement", "sparse", "--resume"]))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "starting fresh" in r.stdout
+
+
+def test_snapshot_flags_validated(tmp_path):
+    r = _run([sys.executable, "-m", "repro.launch.train", "--task", "ctr",
+              "--samples", "512", "--batch", "64", "--epochs", "1",
+              "--snapshot-dir", str(tmp_path / "x")])
+    assert r.returncode != 0
+    assert "--mode stream" in r.stderr
+    r = _run([sys.executable, "-m", "repro.launch.train", "--task", "ctr",
+              "--samples", "512", "--batch", "64", "--resume"])
+    assert r.returncode != 0
+    assert "--snapshot-dir" in r.stderr
